@@ -1,0 +1,99 @@
+"""Beyond-paper engine benchmarks: batched serving throughput + kernel µbench.
+
+The paper measures per-query latency under a disk cost model; the TPU engine's
+native metric is batched throughput (queries/s) and bytes-touched. This
+harness reports both, plus microbenchmarks of the Pallas kernel entry points
+(interpret mode on CPU — wall numbers are for relative tracking only; the
+roofline analysis in EXPERIMENTS.md covers the TPU target).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build, device_tree as dt, labels
+from repro.core.hybrid import hybrid_query
+from repro.core.rtree import RTree
+from repro.data import synth
+
+
+def _time(fn, reps=5):
+    fn()  # warm
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.time() - t0) / reps
+
+
+def serving_throughput(rows: list, n_points: int = 120_000,
+                       batch: int = 512) -> None:
+    pts = synth.tweets_like(n_points, seed=0)
+    tree = RTree(max_entries=128).insert_all(pts)
+    dtree = dt.flatten(tree)
+    qs = synth.synth_queries(pts, 5e-5, 4000, seed=1)
+    wl = labels.make_workload(dtree, qs)
+    hyb, rep = build.fit_airtree(dtree, wl, kind="knn", grid_sizes=(8, 12))
+    q = jnp.asarray(wl.queries[:batch])
+    for force in ("r", "ai", "auto"):
+        dtm = _time(lambda: hybrid_query(hyb, q, force_path=force))
+        out = hybrid_query(hyb, q, force_path=force)
+        acc = float(np.asarray(out.leaf_accesses).mean())
+        # bytes touched ≈ leaf accesses × leaf tile bytes
+        tile = dtree.leaf_entries.shape[1] * 2 * 4
+        rows.append((f"serve_{force}_qps", batch / dtm,
+                     f"leaf_acc={acc:.2f},tile_bytes={tile}"))
+
+
+def kernel_micro(rows: list) -> None:
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+
+    def rects(n):
+        lo = rng.uniform(-1, 1, (n, 2))
+        w = rng.uniform(0, 0.3, (n, 2))
+        return jnp.asarray(np.concatenate([lo, lo + w], 1), jnp.float32)
+
+    q, m = rects(1024), rects(4096)
+    dtm = _time(lambda: ops.mbr_intersect(q, m))
+    rows.append(("mbr_intersect_1024x4096_us", dtm * 1e6,
+                 f"{1024*4096/dtm/1e9:.2f}Gpairs/s"))
+
+    entries = jnp.asarray(rng.uniform(-1, 1, (4096, 256, 2)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 4096, (256, 32)), jnp.int32)
+    val = jnp.ones((256, 32), jnp.int32)
+    dtm = _time(lambda: ops.leaf_refine(q[:256], entries, idx, val))
+    rows.append(("leaf_refine_256x32x256_us", dtm * 1e6,
+                 f"{256*32*256/dtm/1e9:.2f}Gtests/s"))
+
+    feats = q[:, :4]
+    fidx = jnp.asarray(rng.integers(0, 4, (16, 8)), jnp.int32)
+    th = jnp.asarray(rng.uniform(-1, 1, (16, 8)), jnp.float32)
+    tb = jnp.asarray(rng.uniform(0, 1, (16, 256, 128)), jnp.float32)
+    dtm = _time(lambda: ops.forest_infer(feats, fidx, th, tb))
+    rows.append(("forest_infer_1024x16_us", dtm * 1e6, ""))
+
+    BH, T, dk, dv = 8, 512, 64, 64
+    r = jnp.asarray(rng.normal(size=(BH, T, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(BH, T, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(BH, T, dv)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.3, 0.999, (BH, T, dk)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(BH, dk)), jnp.float32)
+    dtm = _time(lambda: ops.wkv6(r, k, v, w, u), reps=2)
+    rows.append(("wkv6_8x512x64_us", dtm * 1e6,
+                 f"{BH*T/dtm/1e6:.2f}Mtok/s"))
+
+
+def main() -> list:
+    rows: list = []
+    serving_throughput(rows)
+    kernel_micro(rows)
+    for name, val, extra in rows:
+        print(f"{name},{val:.2f},{extra}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

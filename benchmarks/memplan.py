@@ -1,0 +1,123 @@
+"""Analytic per-device memory plan per (arch × shape) on the 16×16 mesh.
+
+Exact state/cache byte accounting from the sharding rules (no compile):
+for every leaf, bytes/device = total_bytes / prod(mesh axis sizes it shards
+over). Activation/temp comes from the dry-run's ``memory_analysis`` (which
+is per-device, post-SPMD — verified in tests/test_launch.py).
+
+This is the "does it fit 16 GB HBM" table in EXPERIMENTS.md §Dry-run.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json  # noqa: E402
+import glob  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+HBM_PER_CHIP = 16 * 2**30  # v5e-class
+
+
+def leaf_device_bytes(leaf, sharding, mesh) -> float:
+    total = leaf.size * leaf.dtype.itemsize
+    denom = 1
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = sharding.spec
+    for ax in spec:
+        if ax is None:
+            continue
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            denom *= axis_size[a]
+    return total / denom
+
+
+def state_plan(arch: str, shape: str, mesh) -> dict:
+    from repro import configs
+    from repro.launch import sharding as shd, specs
+    from repro.models import transformer as tf
+    import jax.numpy as jnp
+    cfg = configs.get_config(arch)
+    sd = specs.SHAPE_DEFS[shape]
+    out = {}
+    if sd["kind"] == "train":
+        state_spec, _ = specs.state_specs(cfg)
+        sh = shd.params_shardings(state_spec, mesh)
+        out["state_gib"] = sum(
+            leaf_device_bytes(l, s, mesh) for l, s in zip(
+                jax.tree.leaves(state_spec), jax.tree.leaves(
+                    sh, is_leaf=lambda x: hasattr(x, "spec")))) / 2**30
+        # grads live once per microbatch at params dtype
+        params_spec = jax.eval_shape(
+            lambda: tf.init_params(cfg, jax.random.PRNGKey(0),
+                                   dtype=jnp.bfloat16))
+        psh = shd.params_shardings(params_spec, mesh)
+        out["grads_gib"] = sum(
+            leaf_device_bytes(l, s, mesh) for l, s in zip(
+                jax.tree.leaves(params_spec), jax.tree.leaves(
+                    psh, is_leaf=lambda x: hasattr(x, "spec")))) / 2**30
+    else:
+        params_spec = jax.eval_shape(
+            lambda: tf.init_params(cfg, jax.random.PRNGKey(0),
+                                   dtype=jnp.bfloat16))
+        psh = shd.params_shardings(params_spec, mesh)
+        out["state_gib"] = sum(
+            leaf_device_bytes(l, s, mesh) for l, s in zip(
+                jax.tree.leaves(params_spec), jax.tree.leaves(
+                    psh, is_leaf=lambda x: hasattr(x, "spec")))) / 2**30
+        out["grads_gib"] = 0.0
+    if sd["kind"] == "decode":
+        tok, cache_spec = specs.decode_specs(cfg, shape)
+        csh = shd.cache_shardings(cache_spec, mesh)
+        out["cache_gib"] = sum(
+            leaf_device_bytes(l, s, mesh) for l, s in zip(
+                jax.tree.leaves(cache_spec), jax.tree.leaves(
+                    csh, is_leaf=lambda x: hasattr(x, "spec")))) / 2**30
+    else:
+        out["cache_gib"] = 0.0
+    return out
+
+
+def main() -> None:
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh()
+
+    from repro import configs
+    from repro.launch.specs import ACCUM, SHAPE_DEFS
+    rows = []
+    for path in sorted(glob.glob(os.path.join(
+            os.path.dirname(__file__), "results", "dryrun",
+            "*__16x16.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok" or rec["arch"] == "airtree":
+            continue
+        plan = state_plan(rec["arch"], rec["shape"], mesh)
+        # analytic activation estimate (the HLO temp number from the CPU
+        # backend does not model TPU buffer assignment across scans):
+        # train: layer-boundary remat saves ≈ 1.5 · L · mb_tokens/dev · d · 2B
+        # prefill: one layer's streamed working set ≈ 8 · tokens/dev · d · 2B
+        cfg = configs.get_config(rec["arch"])
+        sd = SHAPE_DEFS[rec["shape"]]
+        if sd["kind"] == "train":
+            accum = ACCUM.get(cfg.name, 1)
+            mb_tok = sd["global_batch"] * sd["seq_len"] / accum / 16
+            act = 1.5 * cfg.n_layers * mb_tok * cfg.d_model * 2 / 2**30
+        elif sd["kind"] == "prefill":
+            act = 8 * sd["global_batch"] * sd["seq_len"] / 16 \
+                * cfg.d_model * 2 / 2**30
+        else:
+            act = 0.1
+        total = plan["state_gib"] + plan["grads_gib"] + \
+            plan["cache_gib"] + act
+        rows.append((rec["arch"], rec["shape"], plan["state_gib"],
+                     plan["grads_gib"], plan["cache_gib"], act, total,
+                     "FITS" if total < 16 else "OVER"))
+    print("arch,shape,state_gib,grads_gib,cache_gib,act_est_gib,"
+          "total_gib,verdict")
+    for r in rows:
+        print(f"{r[0]},{r[1]},{r[2]:.2f},{r[3]:.2f},{r[4]:.2f},"
+              f"{r[5]:.2f},{r[6]:.2f},{r[7]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Reproduction of the paper's experiments (Figures 7/8, Tables III/IV).
+
+Protocol (§V):
+  * two datasets (tweets-like, crimes-like — synthetic stand-ins for
+    UCR-STAR, see ``repro.data.synth``);
+  * R-tree built by one-at-a-time insertion, linear split, m = M/2;
+  * synthetic fixed-selectivity range queries, categorized into α buckets
+    {0.1, 0.25, 0.5, 0.75, 1.0} by executing them (≤1000 per bucket);
+  * per-α-bucket experiments: train the AI+R-tree on that bucket's workload
+    (train == test, the paper's instance-optimized setting), then report the
+    average per-query time of the R-tree, AI-tree and "AI+R"-tree under the
+    paper's cost model: measured CPU time + 13 ms per leaf access (§V-D);
+  * Tables III/IV: R-tree byte size vs ML-model byte size per α.
+
+Scale: the default runs a reduced dataset (400k/250k points instead of
+2M/872k) so the whole suite stays CPU-friendly; ``--full`` reproduces the
+paper's sizes. Ratios (the paper's claim) are scale-stable.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pickle
+import time
+from typing import Iterable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build, device_tree as dt, labels
+from repro.core.hybrid import hybrid_query
+from repro.core.rtree import RTree
+from repro.data import synth
+
+CACHE = os.path.join(os.path.dirname(__file__), ".cache")
+IO_MS = 13.0  # paper §V-D disk I/O per leaf access
+
+
+def cached_tree(name: str, pts: np.ndarray, M: int) -> RTree:
+    os.makedirs(CACHE, exist_ok=True)
+    key = f"{name}_{pts.shape[0]}_{M}.pkl"
+    path = os.path.join(CACHE, key)
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    t0 = time.time()
+    tree = RTree(max_entries=M).insert_all(pts)
+    print(f"#   built {key} in {time.time()-t0:.0f}s")
+    with open(path, "wb") as f:
+        pickle.dump(tree, f)
+    return tree
+
+
+def _timed_path(hyb, queries: jnp.ndarray, force: str, max_visited: int,
+                reps: int = 3) -> tuple[float, float]:
+    """Returns (cpu_ms_per_query, mean_leaf_accesses)."""
+    out = hybrid_query(hyb, queries, force_path=force,
+                       max_visited=max_visited)
+    jax.block_until_ready(out)  # compile + warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = hybrid_query(hyb, queries, force_path=force,
+                           max_visited=max_visited)
+        jax.block_until_ready(out)
+    cpu_ms = (time.time() - t0) / reps / queries.shape[0] * 1e3
+    return cpu_ms, float(np.asarray(out.leaf_accesses).mean())
+
+
+def run_dataset(name: str, pts: np.ndarray, *, node_caps: Iterable[int],
+                selectivities: Iterable[float], n_queries: int,
+                per_bucket: int, classifier: str, tau: float = 0.75,
+                grid_sizes=(2, 4, 6, 8, 10, 14, 20), seed: int = 0,
+                rows: list | None = None) -> list:
+    rows = rows if rows is not None else []
+    for M in node_caps:
+        tree = cached_tree(name, pts, M)
+        dtree = dt.flatten(tree)
+        max_vis = min(512, dtree.n_leaves)
+        for sel in selectivities:
+            qs = synth.synth_queries(pts, sel, n_queries, seed=seed)
+            wl = labels.make_workload(dtree, qs, max_visited=max_vis)
+            buckets = synth.bucket_by_alpha(wl, per_bucket=per_bucket)
+            for a, sub in sorted(buckets.items()):
+                if sub.n_queries < 20:
+                    continue
+                hyb, rep = build.fit_airtree(
+                    dtree, sub, kind=classifier, tau=tau,
+                    grid_sizes=grid_sizes, router_workload=wl)
+                q = jnp.asarray(sub.queries)
+                for force, label in (("r", "rtree"), ("ai", "aitree"),
+                                     ("auto", "air")):
+                    cpu_ms, acc = _timed_path(hyb, q, force, max_vis)
+                    total = cpu_ms + IO_MS * acc
+                    rows.append(dict(
+                        dataset=name, M=M, selectivity=sel, alpha=a,
+                        struct=label, cpu_ms=round(cpu_ms, 3),
+                        leaf_accesses=round(acc, 2),
+                        total_ms=round(total, 2),
+                        exact_fit=round(rep.exact_fit, 4),
+                        grid=rep.grid_size,
+                        model_mb=round(rep.model_bytes / 1e6, 3),
+                        router_mb=round(rep.router_bytes / 1e6, 3),
+                        rtree_mb=round(tree.stats().array_bytes / 1e6, 2),
+                        router_acc=round(rep.router.test_acc, 3),
+                    ))
+                r = [x for x in rows if x["dataset"] == name and x["M"] == M
+                     and x["selectivity"] == sel and x["alpha"] == a]
+                by = {x["struct"]: x for x in r}
+                speedup = by["rtree"]["total_ms"] / max(
+                    by["air"]["total_ms"], 1e-9)
+                print(f"# {name} M={M} sel={sel} a={a}: "
+                      f"R {by['rtree']['total_ms']}ms "
+                      f"AI {by['aitree']['total_ms']}ms "
+                      f"AI+R {by['air']['total_ms']}ms "
+                      f"(x{speedup:.2f}, fit {rep.exact_fit:.3f})")
+    return rows
+
+
+def print_csv(rows: list) -> None:
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+def main(full: bool = False, classifier: str = "knn", quick: bool = False):
+    n_tweets = 2_000_000 if full else (60_000 if quick else 400_000)
+    n_crimes = 872_000 if full else (40_000 if quick else 250_000)
+    n_queries = 1_000 if quick else 5_000
+    per_bucket = 200 if quick else 1_000
+    caps = (64,) if quick else (200, 400, 800)
+    sels = (5e-5,) if quick else (1e-5, 5e-5)
+    rows: list = []
+    # Fig. 7a/7b (+7c/7d via node caps) — tweets
+    run_dataset("tweets", synth.tweets_like(n_tweets), node_caps=caps,
+                selectivities=sels, n_queries=n_queries,
+                per_bucket=per_bucket, classifier=classifier, rows=rows)
+    # Fig. 8a/8b (+8c/8d) — crimes
+    run_dataset("crimes", synth.crimes_like(n_crimes), node_caps=caps,
+                selectivities=sels, n_queries=n_queries,
+                per_bucket=per_bucket, classifier=classifier, rows=rows)
+    print_csv(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--classifier", default="knn",
+                   choices=("knn", "forest", "mlp"))
+    args = p.parse_args()
+    main(full=args.full, classifier=args.classifier, quick=args.quick)

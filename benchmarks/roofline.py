@@ -1,0 +1,117 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) cell on the single-pod mesh, derive the three roofline
+terms from the compiled dry-run:
+
+  compute    = HLO_FLOPs_per_dev / 197e12        (bf16 peak per chip)
+  memory     = HLO_bytes_per_dev / 819e9         (HBM bandwidth)
+  collective = wire_bytes_per_dev / 50e9         (per-link ICI)
+
+The dominant term is the bottleneck; the roofline fraction we report is
+compute / dominant — the share of step time the MXUs could be busy if
+everything else overlapped perfectly. MODEL_FLOPS uses 6·N·D (train),
+2·N·D (prefill) or 2·N_active·B (decode, per step); the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/redundant compute.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    n_dev = rec["n_devices"]
+    flops_dev = rec["cost"].get("flops", 0.0)
+    bytes_dev = rec["cost"].get("bytes accessed", 0.0)
+    wire_dev = rec["collectives"]["wire_bytes_total"]
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = bytes_dev / HBM_BW
+    t_n = wire_dev / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))[1]
+    tokens = rec["global_batch"] * (rec["seq_len"] if rec["kind"] != "decode"
+                                    else 1)
+    n_params = rec["model_params"]
+    n_active = rec["model_params_active"]
+    if rec["kind"] == "train":
+        model_flops = 6.0 * n_active * tokens
+    elif rec["kind"] == "prefill":
+        model_flops = 2.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * tokens
+    hlo_total = flops_dev * n_dev
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    t_dom = max(t_c, t_m, t_n)
+    hints = {
+        "compute": "at compute roof — shave remat/redundant FLOPs "
+                   "(useful-ratio below) to move it",
+        "memory": "HBM-bound — raise arithmetic intensity (fuse, widen "
+                  "tiles, bf16 the biggest streams)",
+        "collective": "ICI-bound — reshard to shrink the biggest "
+                      "collective or overlap it under compute",
+    }
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        kind=rec["kind"], n_devices=n_dev,
+        t_compute_s=t_c, t_memory_s=t_m, t_collective_s=t_n,
+        dominant=dom,
+        roofline_fraction=(t_c / t_dom) if t_dom > 0 else 0.0,
+        model_flops=model_flops, hlo_flops_total=hlo_total,
+        useful_flops_ratio=useful,
+        hint=hints[dom],
+        collective_counts=rec["collectives"]["counts"],
+    )
+
+
+def load_all(results_dir: str = RESULTS_DIR, mesh: str = "16x16") -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh:
+            continue
+        row = analyze(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def print_table(rows: list) -> None:
+    hdr = ("arch", "shape", "t_comp(s)", "t_mem(s)", "t_coll(s)",
+           "dominant", "roofline%", "useful%")
+    print(" | ".join(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        print(" | ".join([
+            r["arch"], r["shape"],
+            f"{r['t_compute_s']:.4f}", f"{r['t_memory_s']:.4f}",
+            f"{r['t_collective_s']:.4f}", r["dominant"],
+            f"{100 * r['roofline_fraction']:.1f}",
+            f"{100 * r['useful_flops_ratio']:.1f}",
+        ]))
+
+
+def main() -> list:
+    rows = load_all()
+    if not rows:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return []
+    print_table(rows)
+    # csv lines for the orchestrator
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        print(f"roofline_{r['arch']}_{r['shape']},"
+              f"{r['roofline_fraction']:.4f},dominant={r['dominant']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Benchmark orchestrator. ``python -m benchmarks.run [--full]``.
+
+One section per paper artifact:
+  paper_tables — Figures 7/8 + Tables III/IV (the reproduction)
+  engine_bench — batched-serving throughput + kernel microbenches
+  roofline     — summarizes the dry-run roofline terms if results exist
+
+Prints ``name,value,derived`` CSV lines per benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import traceback
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true",
+                   help="paper-scale datasets (2M/872k points)")
+    p.add_argument("--quick", action="store_true",
+                   help="smoke-scale (CI) run")
+    p.add_argument("--only", default=None,
+                   help="run a single section by name")
+    args = p.parse_args()
+
+    sections = []
+
+    def want(name: str) -> bool:
+        return args.only is None or args.only == name
+
+    if want("paper_tables"):
+        from benchmarks import paper_tables
+        print("== paper_tables (Fig 7/8, Tables III/IV) ==")
+        try:
+            paper_tables.main(full=args.full,
+                              quick=args.quick or not args.full)
+            sections.append("paper_tables")
+        except Exception:
+            traceback.print_exc()
+
+    if want("engine_bench"):
+        from benchmarks import engine_bench
+        print("== engine_bench (beyond-paper throughput) ==")
+        try:
+            engine_bench.main()
+            sections.append("engine_bench")
+        except Exception:
+            traceback.print_exc()
+
+    if want("roofline"):
+        from benchmarks import roofline
+        print("== roofline (from dry-run artifacts) ==")
+        try:
+            roofline.main()
+            sections.append("roofline")
+        except Exception:
+            traceback.print_exc()
+
+    print(f"== done: {', '.join(sections)} ==")
+
+
+if __name__ == "__main__":
+    main()

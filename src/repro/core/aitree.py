@@ -1,0 +1,99 @@
+"""The AI-tree (paper §III): predict true leaves, access only those, refine.
+
+Query path (Fig. 5/6):
+  1. grid-route the query to its overlapped cells (≤ ``max_cells``);
+  2. run those cells' models, union their per-leaf scores (max-combine);
+  3. threshold → predicted leaf set (≤ ``max_pred``);
+  4. fetch ONLY predicted leaves and refine entries exactly (never a false
+     positive, §III-C);
+  5. raise the fallback flag when the prediction is unusable — empty set,
+     a predicted leaf with zero qualifying entries (the paper's
+     misprediction signal), grid/prediction overflow — the caller then runs
+     the classical R-path for those queries, keeping results exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device_tree import DeviceTree
+from repro.core.grid import Grid, cells_of_queries
+from repro.core.classifiers.mlp import (MLPBank, cell_logits_for,
+                                        global_scores)
+from repro.core.classifiers.forest import Forest, cell_probs_for
+from repro.core.classifiers.knn import KNNBank, cell_probs_for as knn_probs
+from repro.core import traversal
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AITree:
+    grid: Grid
+    bank: Union[MLPBank, Forest]
+    kind: str = dataclasses.field(metadata=dict(static=True))  # "mlp"|"forest"
+    max_cells: int = dataclasses.field(metadata=dict(static=True))
+    max_pred: int = dataclasses.field(metadata=dict(static=True))
+    threshold: float = dataclasses.field(metadata=dict(static=True))
+
+
+def make_aitree(grid: Grid, bank, *, max_cells: int = 4, max_pred: int = 64,
+                threshold: float = 0.5) -> AITree:
+    kind = {MLPBank: "mlp", Forest: "forest", KNNBank: "knn"}[type(bank)]
+    return AITree(grid=grid, bank=bank, kind=kind, max_cells=max_cells,
+                  max_pred=max_pred, threshold=threshold)
+
+
+def predict_scores(ait: AITree, queries: jnp.ndarray, n_leaves: int
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """[B, 4] → (leaf scores [B, L], cell_overflow [B])."""
+    cell_ids, valid, overflow = cells_of_queries(
+        ait.grid, queries, ait.max_cells)
+    if ait.kind == "mlp":
+        probs = jax.nn.sigmoid(cell_logits_for(ait.bank, queries, cell_ids))
+    elif ait.kind == "knn":
+        probs = knn_probs(ait.bank, queries, cell_ids)
+    else:
+        probs = cell_probs_for(ait.bank, queries, cell_ids)
+    scores = global_scores(ait.bank, probs, valid, cell_ids, n_leaves)
+    return scores, overflow
+
+
+class AIQueryResult(NamedTuple):
+    pred_mask: jnp.ndarray     # [B, L] predicted leaves
+    counts: jnp.ndarray        # [B, K] qualifying entries per accessed leaf
+    n_pred: jnp.ndarray        # [B] leaves accessed by the AI path
+    n_results: jnp.ndarray     # [B] qualifying points found
+    result_ids: jnp.ndarray    # [B, max_results] i32, -1 pad
+    fallback: jnp.ndarray      # [B] bool — run the exact R-path instead
+
+
+@functools.partial(jax.jit, static_argnames=("max_results", "use_kernel"))
+def ai_query(ait: AITree, tree: DeviceTree, queries: jnp.ndarray, *,
+             max_results: int = 512, use_kernel: bool = False
+             ) -> AIQueryResult:
+    queries = queries.astype(jnp.float32)
+    L = tree.n_leaves
+    scores, cell_over = predict_scores(ait, queries, L)
+    pred = scores > ait.threshold                           # [B, L]
+    leaf_idx, valid = traversal.compact_mask(pred, ait.max_pred)
+    pred_over = traversal.overflowed(pred, ait.max_pred)
+    ref = traversal.refine_leaves(tree, queries, leaf_idx, valid,
+                                  use_kernel=use_kernel)
+    n_pred = jnp.sum(pred.astype(jnp.int32), axis=-1)
+    empty = n_pred == 0
+    # paper's misprediction signal: a predicted leaf with no qualifying entry
+    mispredict = jnp.any((ref.counts == 0) & valid, axis=-1)
+    result_ids, trunc = traversal.gather_result_ids(tree, ref, max_results)
+    fallback = empty | mispredict | cell_over | pred_over | trunc
+    return AIQueryResult(
+        pred_mask=pred,
+        counts=ref.counts,
+        n_pred=jnp.minimum(n_pred, ait.max_pred),
+        n_results=jnp.sum(ref.counts * valid.astype(jnp.int32), axis=-1),
+        result_ids=result_ids,
+        fallback=fallback,
+    )

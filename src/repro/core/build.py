@@ -1,0 +1,111 @@
+"""End-to-end "AI+R"-tree construction for a (data, query) workload.
+
+Implements the paper's training protocol:
+  * execute the workload on the R-tree to collect (visited, true) labels;
+  * hill-climb the grid size (2×2 → max, §III-B / §V-B3) until the cell
+    models reach the best exact fit on the training workload;
+  * train the binary router on an 80/20 split (§V-C2);
+  * assemble the hybrid structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import celldata, grid as gridlib, labels
+from repro.core.aitree import make_aitree
+from repro.core.classifiers import forest as forestlib
+from repro.core.classifiers import mlp as mlplib
+from repro.core.classifiers.router import train_router, RouterReport
+from repro.core.device_tree import DeviceTree
+from repro.core.hybrid import HybridTree
+
+
+@dataclasses.dataclass
+class BuildReport:
+    grid_sizes_tried: list
+    grid_size: int
+    exact_fit: float
+    classifier_kind: str
+    cells_trained: int
+    model_bytes: int
+    router_bytes: int
+    router: RouterReport
+    train_seconds: float
+
+
+def _eval_exact_fit(ait, dtree: DeviceTree, wl: labels.Workload,
+                    batch: int = 256) -> float:
+    """Fraction of workload queries the AI path answers without fallback AND
+    with exactly the true leaf set accessed."""
+    import jax.numpy as jnp
+    from repro.core.aitree import ai_query
+    ok = 0
+    Q = wl.n_queries
+    for o in range(0, Q, batch):
+        q = wl.queries[o:o + batch]
+        pad = batch - q.shape[0]
+        if pad:
+            q = np.concatenate([q, np.tile(q[-1:], (pad, 1))])
+        res = ai_query(ait, dtree, jnp.asarray(q))
+        take = batch - pad
+        pred = np.asarray(res.pred_mask)[:take]
+        fb = np.asarray(res.fallback)[:take]
+        tgt = wl.true_labels[o:o + take]
+        ok += int(np.sum(~fb & np.all(pred == tgt, axis=1)))
+    return ok / Q
+
+
+def fit_airtree(dtree: DeviceTree, workload: labels.Workload, *,
+                kind: str = "mlp", tau: float = 0.75,
+                grid_sizes: Sequence[int] = (2, 4, 6, 8, 10, 14, 20),
+                max_cells: int = 4, max_pred: int = 64,
+                target_fit: float = 1.0, mlp_hidden: int = 64,
+                mlp_epochs: int = 3000, forest_trees: int = 1,
+                forest_depth: int = 8, seed: int = 0,
+                router_workload: Optional[labels.Workload] = None,
+                verbose: bool = False) -> tuple[HybridTree, BuildReport]:
+    t0 = time.time()
+    best = None  # (fit, g, ait, bytes, cells)
+    tried = []
+    for g in grid_sizes:
+        gr = gridlib.fit_grid(workload.queries, g)
+        ds = celldata.build_cell_datasets(gr, workload,
+                                          max_cells_per_query=max_cells)
+        if kind == "mlp":
+            bank, rep = mlplib.train_bank(
+                ds, hidden=mlp_hidden, max_epochs=mlp_epochs,
+                target_fit=target_fit, seed=seed)
+        elif kind == "knn":
+            from repro.core.classifiers import knn as knnlib
+            bank = knnlib.fit_knn(ds)
+        else:
+            bank = forestlib.fit_forest(
+                ds.feats, ds.labels, ds.qmask, ds.label_map, ds.lmask,
+                n_trees=forest_trees, depth=forest_depth, seed=seed)
+        nbytes = bank.byte_size()
+        ait = make_aitree(gr, bank, max_cells=max_cells, max_pred=max_pred)
+        fit = _eval_exact_fit(ait, dtree, workload)
+        tried.append((g, round(fit, 4)))
+        if verbose:
+            print(f"  grid {g}x{g}: exact-fit {fit:.4f} "
+                  f"({ds.n_cells_used} cells, {nbytes/1e6:.2f} MB)")
+        if best is None or fit > best[0]:
+            best = (fit, g, ait, nbytes, ds.n_cells_used)
+        if fit >= target_fit:
+            break
+    fit, g, ait, nbytes, cells = best
+
+    # §V-C2: the router is trained to GENERALIZE over the combined-α workload
+    rwl = router_workload if router_workload is not None else workload
+    router, rrep = train_router(rwl.queries, rwl.alpha, tau=tau, seed=seed)
+    hybrid = HybridTree(tree=dtree, ait=ait, router=router)
+    report = BuildReport(
+        grid_sizes_tried=tried, grid_size=g, exact_fit=fit,
+        classifier_kind=kind, cells_trained=cells, model_bytes=nbytes,
+        router_bytes=router.byte_size(), router=rrep,
+        train_seconds=time.time() - t0)
+    return hybrid, report

@@ -1,0 +1,111 @@
+"""Per-grid-cell training-set assembly (paper §III-B).
+
+Every query is assigned to each grid cell it overlaps; each non-empty cell
+gets its own training set whose label space is *cell-local*: the union of
+true leaf IDs seen by that cell's queries. Cell-local labels keep the
+classifier heads small (the paper's per-cell decision trees have the same
+property implicitly) and map back to global DFS leaf IDs via ``label_map``.
+
+All outputs are padded, stacked arrays ready for expert-parallel training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.grid import Grid, bucket_queries_by_cell
+from repro.core.labels import Workload
+
+
+@dataclasses.dataclass
+class CellDataset:
+    grid: Grid
+    feats: np.ndarray       # [C, Qp, F] f32 — per-cell padded query features
+    labels: np.ndarray      # [C, Qp, Cl] f32 — cell-local multi-hot targets
+    qmask: np.ndarray       # [C, Qp] bool — query-slot validity
+    lmask: np.ndarray       # [C, Cl] bool — label-slot validity
+    label_map: np.ndarray   # [C, Cl] i32 — cell-local → global leaf id (-1 pad)
+    n_cells_used: int       # non-empty cells (models actually trained)
+    label_overflow: np.ndarray  # [C] bool — label space exceeded Cl
+    query_overflow: np.ndarray  # [C] bool — query count exceeded Qp
+
+    @property
+    def n_cells(self) -> int:
+        return self.feats.shape[0]
+
+    @property
+    def max_labels(self) -> int:
+        return self.labels.shape[-1]
+
+
+def query_features(queries: np.ndarray) -> np.ndarray:
+    """Feature representation (§III-A5): the raw query rectangle. The model
+    may normalize internally; the input interface stays the rectangle."""
+    return np.asarray(queries, dtype=np.float32)
+
+
+def build_cell_datasets(grid: Grid, workload: Workload, *,
+                        max_cells_per_query: int = 4,
+                        max_labels: Optional[int] = None,
+                        max_queries: Optional[int] = None) -> CellDataset:
+    """Assemble per-cell padded training sets from a labelled workload."""
+    ids, valid, _ = bucket_queries_by_cell(
+        grid, workload.queries, max_cells_per_query)
+    C = grid.n_cells
+    per_cell_q: list[list[int]] = [[] for _ in range(C)]
+    for qi in range(workload.n_queries):
+        for s in range(max_cells_per_query):
+            if valid[qi, s]:
+                per_cell_q[int(ids[qi, s])].append(qi)
+
+    # label spaces
+    true_rows = [np.flatnonzero(workload.true_labels[qi])
+                 for qi in range(workload.n_queries)]
+    cell_labels: list[np.ndarray] = []
+    for c in range(C):
+        if per_cell_q[c]:
+            u = np.unique(np.concatenate(
+                [true_rows[qi] for qi in per_cell_q[c]] or [np.empty(0, np.int64)]))
+        else:
+            u = np.empty(0, np.int64)
+        cell_labels.append(u)
+
+    Cl = max_labels or max(8, max((len(u) for u in cell_labels), default=8))
+    Qp = max_queries or max(8, max((len(q) for q in per_cell_q), default=8))
+
+    feats = np.zeros((C, Qp, 4), np.float32)
+    labels = np.zeros((C, Qp, Cl), np.float32)
+    qmask = np.zeros((C, Qp), bool)
+    lmask = np.zeros((C, Cl), bool)
+    label_map = np.full((C, Cl), -1, np.int32)
+    l_over = np.zeros((C,), bool)
+    q_over = np.zeros((C,), bool)
+    fx = query_features(workload.queries)
+    used = 0
+    for c in range(C):
+        qs = per_cell_q[c]
+        if not qs:
+            continue
+        used += 1
+        u = cell_labels[c]
+        if len(u) > Cl:
+            l_over[c] = True
+            u = u[:Cl]
+        if len(qs) > Qp:
+            q_over[c] = True
+            qs = qs[:Qp]
+        pos = {g: i for i, g in enumerate(u)}
+        label_map[c, :len(u)] = u
+        lmask[c, :len(u)] = True
+        for slot, qi in enumerate(qs):
+            feats[c, slot] = fx[qi]
+            qmask[c, slot] = True
+            for g in true_rows[qi]:
+                if g in pos:
+                    labels[c, slot, pos[g]] = 1.0
+    return CellDataset(
+        grid=grid, feats=feats, labels=labels, qmask=qmask, lmask=lmask,
+        label_map=label_map, n_cells_used=used, label_overflow=l_over,
+        query_overflow=q_over)

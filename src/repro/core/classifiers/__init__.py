@@ -1,0 +1,1 @@
+"""Learned components of the AI-tree: multi-label cell experts + binary router."""

@@ -1,0 +1,176 @@
+"""Oblivious decision forests — the paper-faithful tree classifier family.
+
+The paper uses sklearn multi-label decision trees (max_depth 30). Pointer
+trees cannot run on a TPU, so we use the closest TPU-executable member of the
+family: **oblivious** trees (one (feature, threshold) test per depth level,
+shared across the whole level). Training is greedy top-down on host numpy;
+inference is fully vectorized and runs through the Pallas
+``forest_infer`` kernel (one-hot × leaf-table matmuls on the MXU).
+
+Multi-label handling: each tree leaf stores the mean multi-hot label vector
+of the training queries that land in it; forest prediction is the average
+over trees, thresholded at 0.5 — the standard multi-label decision-tree
+reduction the paper's classifier also uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Forest:
+    """A bank of per-cell oblivious forests, stacked for batched inference.
+
+    Shapes: ``C`` cells × ``T`` trees × depth ``D`` × ``Cl`` local labels.
+    """
+    feat_idx: jnp.ndarray   # [C, T, D] i32
+    thresh: jnp.ndarray     # [C, T, D] f32
+    tables: jnp.ndarray     # [C, T, 2^D, Cl] f32 leaf label means
+    label_map: jnp.ndarray  # [C, Cl] i32
+    lmask: jnp.ndarray      # [C, Cl] bool
+
+    @property
+    def n_cells(self) -> int:
+        return self.feat_idx.shape[0]
+
+    @property
+    def n_trees(self) -> int:
+        return self.feat_idx.shape[1]
+
+    @property
+    def depth(self) -> int:
+        return self.feat_idx.shape[2]
+
+    def byte_size(self) -> int:
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in
+                   (self.feat_idx, self.thresh, self.tables, self.label_map))
+
+
+def _fit_oblivious_tree(X: np.ndarray, Y: np.ndarray, depth: int,
+                        n_thresholds: int, rng: np.random.Generator
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Greedy level-wise fit. X [n, F], Y [n, Cl] → (feat [D], th [D],
+    table [2^D, Cl]). Split criterion: sum of per-leaf label variance
+    (Brier impurity), the multi-label generalization of gini.
+    """
+    n, F = X.shape
+    Cl = Y.shape[1]
+    leaf = np.zeros(n, np.int64)
+    feats = np.zeros(depth, np.int32)
+    ths = np.zeros(depth, np.float32)
+    for d in range(depth):
+        best = (np.inf, 0, 0.0)
+        n_leaves = 2 ** d
+        for f in range(F):
+            xs = X[:, f]
+            qs = np.unique(np.quantile(
+                xs, np.linspace(0.05, 0.95, n_thresholds)))
+            for t in qs:
+                bit = (xs > t).astype(np.int64)
+                nl = leaf * 2 + bit
+                # impurity = Σ_leaf Σ_label n_l p(1-p)
+                imp = 0.0
+                sums = np.zeros((n_leaves * 2, Cl))
+                cnts = np.zeros(n_leaves * 2)
+                np.add.at(sums, nl, Y)
+                np.add.at(cnts, nl, 1.0)
+                nz = cnts > 0
+                p = sums[nz] / cnts[nz, None]
+                imp = float(np.sum(cnts[nz, None] * p * (1 - p)))
+                if imp < best[0]:
+                    best = (imp, f, float(t))
+        feats[d] = best[1]
+        ths[d] = best[2]
+        leaf = leaf * 2 + (X[:, best[1]] > best[2]).astype(np.int64)
+    table = np.zeros((2 ** depth, Cl), np.float32)
+    cnts = np.zeros(2 ** depth)
+    np.add.at(table, leaf, Y)
+    np.add.at(cnts, leaf, 1.0)
+    nz = cnts > 0
+    table[nz] /= cnts[nz, None]
+    return feats, ths, table
+
+
+def fit_forest(feats_pc: np.ndarray, labels_pc: np.ndarray, qmask: np.ndarray,
+               label_map: np.ndarray, lmask: np.ndarray, *, n_trees: int = 1,
+               depth: int = 8, n_thresholds: int = 16, bootstrap: bool = False,
+               seed: int = 0) -> Forest:
+    """Fit one oblivious forest per non-empty cell.
+
+    Inputs are the padded stacks from ``CellDataset``: feats [C, Qp, F],
+    labels [C, Qp, Cl]. ``n_trees > 1`` uses bootstrap bagging (the binary
+    *random forest* router reuses this with ``bootstrap=True``).
+    """
+    C, Qp, F = feats_pc.shape
+    Cl = labels_pc.shape[-1]
+    rng = np.random.default_rng(seed)
+    fi = np.zeros((C, n_trees, depth), np.int32)
+    th = np.full((C, n_trees, depth), np.inf, np.float32)  # inf → always-left
+    tb = np.zeros((C, n_trees, 2 ** depth, Cl), np.float32)
+    for c in range(C):
+        sel = qmask[c]
+        if not sel.any():
+            continue
+        X, Y = feats_pc[c][sel], labels_pc[c][sel]
+        for t in range(n_trees):
+            if bootstrap and X.shape[0] > 1:
+                idx = rng.integers(0, X.shape[0], X.shape[0])
+                Xt, Yt = X[idx], Y[idx]
+            else:
+                Xt, Yt = X, Y
+            fi[c, t], th[c, t], tb[c, t] = _fit_oblivious_tree(
+                Xt, Yt, depth, n_thresholds, rng)
+    return Forest(feat_idx=jnp.asarray(fi), thresh=jnp.asarray(th),
+                  tables=jnp.asarray(tb), label_map=jnp.asarray(label_map),
+                  lmask=jnp.asarray(lmask))
+
+
+def cell_probs_for(forest: Forest, feats: jnp.ndarray,
+                   cell_ids: jnp.ndarray) -> jnp.ndarray:
+    """Per-(query, cell-slot) forest prediction: [B, F] × [B, S] → [B, S, Cl].
+
+    Gathered formulation for mixed batches (single-device path). The
+    expert-sharded engine path uses ``cell_probs_dense`` + the Pallas kernel.
+    """
+    fi = forest.feat_idx[cell_ids]            # [B, S, T, D]
+    th = forest.thresh[cell_ids]
+    tb = forest.tables[cell_ids]              # [B, S, T, 2^D, Cl]
+    B, S, T, D = fi.shape
+    # gather feature values feats[b, fi[b,s,t,d]]
+    sel = jax.vmap(lambda fvec, fidx: fvec[fidx])(feats, fi.reshape(B, -1))
+    sel = sel.reshape(B, S, T, D)
+    bits = (sel > th).astype(jnp.int32)
+    powers = 2 ** jnp.arange(D - 1, -1, -1, dtype=jnp.int32)
+    leaf = jnp.sum(bits * powers, axis=-1)    # [B, S, T]
+    votes = jnp.take_along_axis(
+        tb, leaf[..., None, None], axis=3)[..., 0, :]      # [B, S, T, Cl]
+    return jnp.mean(votes, axis=2)
+
+
+def cell_probs_dense(forest: Forest, feats: jnp.ndarray,
+                     use_kernel: bool = True) -> jnp.ndarray:
+    """All-cells dense prediction: [B, F] → [B, C, Cl] (engine path).
+
+    Flattens (cell, tree) → one kernel launch; per-cell vote sums come back
+    from the celled kernel variant.
+    """
+    from repro.kernels import ops as kops
+    C, T, D = forest.feat_idx.shape
+    Cl = forest.tables.shape[-1]
+    fi = forest.feat_idx.reshape(C * T, D)
+    th = forest.thresh.reshape(C * T, D)
+    tb = forest.tables.reshape(C * T, 2 ** D, Cl)
+    if use_kernel:
+        votes = kops.forest_infer_cells(feats, fi, th, tb, n_cells=C)
+    else:
+        from repro.kernels import ref
+        sel = feats[:, fi]
+        flat = ref.forest_infer_percell(sel, th, tb)       # [B, C*T, Cl]
+        votes = flat.reshape(feats.shape[0], C, T, Cl).sum(axis=2)
+    return votes / T

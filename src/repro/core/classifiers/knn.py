@@ -1,0 +1,75 @@
+"""Per-cell exact-memorization classifier (nearest-stored-query lookup).
+
+The paper's sklearn decision trees (max_depth 30) effectively *memorize* the
+training workload — that is what gives the AI-tree its 100% training-set
+accuracy (§V-B3). Oblivious trees (our TPU-executable tree family) share one
+split per level and cannot always reach perfect memorization. This module
+provides the memorization-complete equivalent: each cell stores its training
+queries and their label sets; at query time the nearest stored query (L∞
+over the rectangle corners) within ε answers. Distance computation is a
+batched matmul-like reduction — MXU/VPU friendly — and unseen queries
+(distance > ε) yield an empty prediction, which triggers the hybrid's exact
+fallback, preserving correctness on any workload.
+
+This is the configuration to compare against the paper's perfect-fit
+numbers; ``forest`` is the paper-faithful classifier *family*, ``knn`` is
+the paper-faithful classifier *behaviour*.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.celldata import CellDataset
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KNNBank:
+    feats: jnp.ndarray      # [C, Qp, F] stored queries (+inf padded)
+    labels: jnp.ndarray     # [C, Qp, Cl] stored multi-hot label sets
+    label_map: jnp.ndarray  # [C, Cl] i32
+    lmask: jnp.ndarray      # [C, Cl] bool
+    eps: float = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_cells(self) -> int:
+        return self.feats.shape[0]
+
+    def byte_size(self) -> int:
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in
+                   (self.feats, self.labels, self.label_map))
+
+
+def fit_knn(ds: CellDataset, eps: float = 1e-6) -> KNNBank:
+    feats = ds.feats.copy()
+    feats[~ds.qmask] = np.inf          # padding can never be nearest
+    return KNNBank(
+        feats=jnp.asarray(feats),
+        labels=jnp.asarray(ds.labels),
+        label_map=jnp.asarray(ds.label_map),
+        lmask=jnp.asarray(ds.lmask),
+        eps=float(eps),
+    )
+
+
+def cell_probs_for(bank: KNNBank, queries: jnp.ndarray,
+                   cell_ids: jnp.ndarray) -> jnp.ndarray:
+    """[B, 4] × [B, S] → [B, S, Cl] — nearest stored query's labels, or 0s.
+
+    Only the winning row's label vector is gathered ([B,S,Cl], not
+    [B,S,Qp,Cl]) — stored-label traffic is Qp× smaller than the naive
+    gather, which dominated the engine's HBM bytes (EXPERIMENTS.md §Perf).
+    """
+    stored = bank.feats[cell_ids]                  # [B, S, Qp, F]
+    q = queries.astype(jnp.float32)[:, None, None, :]
+    d = jnp.max(jnp.abs(jnp.where(jnp.isfinite(stored), stored, 1e30) - q),
+                axis=-1)                           # [B, S, Qp] L∞
+    best = jnp.argmin(d, axis=-1)                  # [B, S]
+    bestd = jnp.min(d, axis=-1)
+    hit = (bestd <= bank.eps)[..., None]           # [B, S, 1]
+    picked = bank.labels[cell_ids, best]           # [B, S, Cl]
+    return jnp.where(hit, picked, 0.0)

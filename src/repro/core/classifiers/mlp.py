@@ -1,0 +1,197 @@
+"""Stacked multi-label MLP experts — the TPU-native cell classifier.
+
+One tiny MLP per non-empty grid cell, all cells stacked into single tensors
+``[C, ...]`` so that (a) expert-parallel sharding over the ``model`` mesh
+axis is a plain array partition and (b) inference over all local cells is a
+dense einsum on the MXU — no per-query parameter gathers.
+
+The paper intentionally **overfits** its per-cell models (§III-B); we train
+with full-batch AdamW until the training workload is exactly fit (predicted
+set == true set under the 0.5 threshold) or an epoch cap is hit. Residual
+misfit is absorbed by the hybrid fallback rule, exactly as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.celldata import CellDataset
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MLPBank:
+    w1: jnp.ndarray         # [C, F, H]
+    b1: jnp.ndarray         # [C, H]
+    w2: jnp.ndarray         # [C, H, Cl]
+    b2: jnp.ndarray         # [C, Cl]
+    mu: jnp.ndarray         # [F] feature normalizer
+    sd: jnp.ndarray         # [F]
+    label_map: jnp.ndarray  # [C, Cl] i32 (-1 pad)
+    lmask: jnp.ndarray      # [C, Cl] bool
+
+    @property
+    def n_cells(self) -> int:
+        return self.w1.shape[0]
+
+    @property
+    def n_local_labels(self) -> int:
+        return self.w2.shape[-1]
+
+    def byte_size(self) -> int:
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in
+                   (self.w1, self.b1, self.w2, self.b2, self.label_map))
+
+
+def init_bank(ds: CellDataset, hidden: int = 64, seed: int = 0) -> MLPBank:
+    C, _, F = ds.feats.shape
+    Cl = ds.max_labels
+    rng = np.random.default_rng(seed)
+    flat = ds.feats[ds.qmask]
+    mu = flat.mean(axis=0) if flat.size else np.zeros((F,), np.float32)
+    sd = flat.std(axis=0) + 1e-6 if flat.size else np.ones((F,), np.float32)
+    return MLPBank(
+        w1=jnp.asarray(rng.normal(0, 1.0 / np.sqrt(F), (C, F, hidden)),
+                       jnp.float32),
+        b1=jnp.zeros((C, hidden), jnp.float32),
+        w2=jnp.asarray(rng.normal(0, 1.0 / np.sqrt(hidden), (C, hidden, Cl)),
+                       jnp.float32),
+        b2=jnp.zeros((C, Cl), jnp.float32),
+        mu=jnp.asarray(mu, jnp.float32),
+        sd=jnp.asarray(sd, jnp.float32),
+        label_map=jnp.asarray(ds.label_map),
+        lmask=jnp.asarray(ds.lmask),
+    )
+
+
+def cell_logits(bank: MLPBank, feats: jnp.ndarray) -> jnp.ndarray:
+    """Dense all-cells forward: feats [..., B, F] → logits [..., B, C, Cl]."""
+    x = (feats - bank.mu) / bank.sd
+    h = jnp.maximum(
+        jnp.einsum("...bf,cfh->...bch", x, bank.w1) + bank.b1, 0.0)
+    return jnp.einsum("...bch,chl->...bcl", h, bank.w2) + bank.b2
+
+
+def cell_logits_for(bank: MLPBank, feats: jnp.ndarray,
+                    cell_ids: jnp.ndarray) -> jnp.ndarray:
+    """Gathered forward for (query, cell-slot) pairs.
+
+    feats [B, F], cell_ids [B, S] → logits [B, S, Cl]. Used by the
+    single-device path where B·S ≪ B·C.
+    """
+    x = (feats - bank.mu) / bank.sd
+    w1 = bank.w1[cell_ids]                    # [B, S, F, H]
+    b1 = bank.b1[cell_ids]
+    w2 = bank.w2[cell_ids]                    # [B, S, H, Cl]
+    b2 = bank.b2[cell_ids]
+    h = jnp.maximum(jnp.einsum("bf,bsfh->bsh", x, w1) + b1, 0.0)
+    return jnp.einsum("bsh,bshl->bsl", h, w2) + b2
+
+
+def global_scores(bank: MLPBank, probs: jnp.ndarray, slot_valid: jnp.ndarray,
+                  cell_ids: jnp.ndarray, n_leaves: int) -> jnp.ndarray:
+    """Union of per-cell predictions (paper: union of model outputs).
+
+    probs [B, S, Cl] sigmoid scores, slot_valid [B, S], cell_ids [B, S]
+    → [B, n_leaves] max-combined scores over the models a query overlaps.
+    """
+    B, S, Cl = probs.shape
+    lm = bank.label_map[cell_ids]                         # [B, S, Cl]
+    ok = slot_valid[:, :, None] & bank.lmask[cell_ids]
+    tgt = jnp.where(ok, lm, n_leaves)                     # park invalid at L
+    flat_t = tgt.reshape(B, S * Cl)
+    flat_p = jnp.where(ok, probs, 0.0).reshape(B, S * Cl)
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    out = jnp.zeros((B, n_leaves + 1), probs.dtype)
+    out = out.at[rows, flat_t].max(flat_p)
+    return out[:, :n_leaves]
+
+
+# ---------------------------------------------------------------------------
+# training (full-batch AdamW over the stacked experts; overfit on purpose)
+# ---------------------------------------------------------------------------
+
+def _bce(bank: MLPBank, feats, labels, qmask, lmask) -> jnp.ndarray:
+    logits = jnp.einsum("cqh,chl->cql", jnp.maximum(
+        jnp.einsum("cqf,cfh->cqh", (feats - bank.mu) / bank.sd, bank.w1)
+        + bank.b1[:, None, :], 0.0), bank.w2) + bank.b2[:, None, :]
+    # positive-class upweighting: multi-hot targets are sparse
+    z = jnp.clip(logits, -30, 30)
+    ce = jnp.maximum(z, 0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    w = jnp.where(labels > 0, 4.0, 1.0)
+    m = qmask[:, :, None] & lmask[:, None, :]
+    return jnp.sum(ce * w * m) / jnp.maximum(jnp.sum(m), 1)
+
+
+def exact_fit_fraction(bank: MLPBank, feats, labels, qmask, lmask,
+                       threshold: float = 0.5) -> jnp.ndarray:
+    """Fraction of (valid) training queries whose predicted set == true set."""
+    logits = jnp.einsum("cqh,chl->cql", jnp.maximum(
+        jnp.einsum("cqf,cfh->cqh", (feats - bank.mu) / bank.sd, bank.w1)
+        + bank.b1[:, None, :], 0.0), bank.w2) + bank.b2[:, None, :]
+    pred = (jax.nn.sigmoid(logits) > threshold) & lmask[:, None, :]
+    tgt = labels > 0.5
+    ok = jnp.all(pred == tgt, axis=-1) | ~qmask
+    return jnp.sum(ok & qmask) / jnp.maximum(jnp.sum(qmask), 1)
+
+
+@dataclasses.dataclass
+class TrainReport:
+    epochs: int
+    final_loss: float
+    exact_fit: float
+
+
+def train_bank(ds: CellDataset, *, hidden: int = 64, lr: float = 3e-3,
+               weight_decay: float = 0.0, max_epochs: int = 3000,
+               check_every: int = 200, target_fit: float = 1.0,
+               seed: int = 0) -> Tuple[MLPBank, TrainReport]:
+    bank = init_bank(ds, hidden=hidden, seed=seed)
+    feats = jnp.asarray(ds.feats)
+    labels = jnp.asarray(ds.labels)
+    qmask = jnp.asarray(ds.qmask)
+    lmask = jnp.asarray(ds.lmask)
+
+    params = {"w1": bank.w1, "b1": bank.b1, "w2": bank.w2, "b2": bank.b2}
+    opt_m = jax.tree.map(jnp.zeros_like, params)
+    opt_v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def update(params, opt_m, opt_v, t):
+        def lf(p):
+            b = dataclasses.replace(bank, **p)
+            return _bce(b, feats, labels, qmask, lmask)
+        loss, g = jax.value_and_grad(lf)(params)
+        b1c, b2c = 0.9, 0.999
+        opt_m = jax.tree.map(lambda m_, g_: b1c * m_ + (1 - b1c) * g_, opt_m, g)
+        opt_v = jax.tree.map(lambda v_, g_: b2c * v_ + (1 - b2c) * g_ ** 2,
+                             opt_v, g)
+        mhat = jax.tree.map(lambda m_: m_ / (1 - b1c ** t), opt_m)
+        vhat = jax.tree.map(lambda v_: v_ / (1 - b2c ** t), opt_v)
+        params = jax.tree.map(
+            lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + 1e-8)
+                                        + weight_decay * p),
+            params, mhat, vhat)
+        return params, opt_m, opt_v, loss
+
+    @jax.jit
+    def fit_of(params):
+        b = dataclasses.replace(bank, **params)
+        return exact_fit_fraction(b, feats, labels, qmask, lmask)
+
+    loss = np.inf
+    fit = 0.0
+    epoch = 0
+    for epoch in range(1, max_epochs + 1):
+        params, opt_m, opt_v, loss = update(params, opt_m, opt_v, epoch)
+        if epoch % check_every == 0 or epoch == max_epochs:
+            fit = float(fit_of(params))
+            if fit >= target_fit:
+                break
+    bank = dataclasses.replace(bank, **params)
+    return bank, TrainReport(epochs=epoch, final_loss=float(loss),
+                             exact_fit=float(fit))

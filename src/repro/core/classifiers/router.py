@@ -1,0 +1,108 @@
+"""The binary high/low-overlap query router (paper §IV, §V-C2).
+
+The paper uses a scikit-learn random forest trained to *generalize* (80/20
+split, ~80% accuracy). We implement the random forest as bagged oblivious
+trees (host-trained, device-evaluated via the forest kernel) over simple
+geometric features of the query rectangle.
+
+Label convention: ``1`` ⇔ high-overlap ⇔ α ≤ τ ⇔ route to the AI-tree.
+(The paper writes it with 0/1 flipped; only the routing decision matters.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.classifiers.forest import _fit_oblivious_tree
+
+
+def router_features(queries: np.ndarray) -> np.ndarray:
+    """[Q, 4] rects → [Q, 6] features: corners + width/height."""
+    q = np.asarray(queries, dtype=np.float32)
+    w = q[:, 2] - q[:, 0]
+    h = q[:, 3] - q[:, 1]
+    return np.concatenate([q, w[:, None], h[:, None]], axis=1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Router:
+    feat_idx: jnp.ndarray   # [T, D] i32
+    thresh: jnp.ndarray     # [T, D] f32
+    tables: jnp.ndarray     # [T, 2^D, 1] f32 — P(high-overlap) per leaf
+    tau: float = dataclasses.field(metadata=dict(static=True))
+
+    def byte_size(self) -> int:
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in (self.feat_idx, self.thresh, self.tables))
+
+
+def predict_proba(router: Router, queries: jnp.ndarray) -> jnp.ndarray:
+    """[B, 4] → [B] P(high-overlap). Runs the Pallas forest kernel."""
+    from repro.kernels import ops as kops
+    q = queries.astype(jnp.float32)
+    feats = jnp.concatenate(
+        [q, (q[:, 2] - q[:, 0])[:, None], (q[:, 3] - q[:, 1])[:, None]],
+        axis=1)
+    votes = kops.forest_infer(feats, router.feat_idx, router.thresh,
+                              router.tables)          # [B, 1] summed votes
+    return votes[:, 0] / router.feat_idx.shape[0]
+
+
+def route_high(router: Router, queries: jnp.ndarray,
+               threshold: float = 0.5) -> jnp.ndarray:
+    """[B, 4] → [B] bool — True ⇒ send to the AI-tree."""
+    return predict_proba(router, queries) > threshold
+
+
+@dataclasses.dataclass
+class RouterReport:
+    train_acc: float
+    test_acc: float
+    n_train: int
+    n_test: int
+    base_rate: float  # fraction of high-overlap queries overall
+
+
+def train_router(queries: np.ndarray, alpha: np.ndarray, *, tau: float = 0.75,
+                 n_trees: int = 16, depth: int = 6, n_thresholds: int = 16,
+                 test_frac: float = 0.2, seed: int = 0
+                 ) -> Tuple[Router, RouterReport]:
+    """80/20 split training (paper §V-C2); reports both-set accuracy."""
+    rng = np.random.default_rng(seed)
+    X = router_features(queries)
+    y = (np.asarray(alpha) <= tau).astype(np.float32)[:, None]
+    n = X.shape[0]
+    perm = rng.permutation(n)
+    n_test = max(1, int(n * test_frac))
+    test, train = perm[:n_test], perm[n_test:]
+    Xtr, ytr = X[train], y[train]
+
+    fis, ths, tbs = [], [], []
+    for t in range(n_trees):
+        idx = rng.integers(0, Xtr.shape[0], Xtr.shape[0])  # bootstrap
+        fi, th, tb = _fit_oblivious_tree(
+            Xtr[idx], ytr[idx], depth, n_thresholds, rng)
+        fis.append(fi)
+        ths.append(th)
+        tbs.append(tb)
+    router = Router(
+        feat_idx=jnp.asarray(np.stack(fis)),
+        thresh=jnp.asarray(np.stack(ths)),
+        tables=jnp.asarray(np.stack(tbs)),
+        tau=float(tau),
+    )
+
+    def acc(idx: np.ndarray) -> float:
+        p = np.asarray(predict_proba(router, jnp.asarray(queries[idx],
+                                                         jnp.float32)))
+        return float(np.mean((p > 0.5) == (y[idx, 0] > 0.5)))
+
+    report = RouterReport(
+        train_acc=acc(train), test_acc=acc(test), n_train=len(train),
+        n_test=len(test), base_rate=float(y.mean()))
+    return router, report

@@ -1,0 +1,103 @@
+"""The model-index grid (paper §III-B, Fig. 6): "indexing the learned models".
+
+A G×G uniform grid over query space; one learned model per *non-empty* cell
+(cells no training query touches get no model). At query time the models
+whose cells overlap the query rectangle are executed and their predictions
+unioned.
+
+The grid is deterministic integer lattice math — its own routing never needs
+learning. It is exactly an MoE router with spatial dispatch; the expert-
+parallel sharding of the per-cell models reuses the same layout as
+``repro.models.moe``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Grid:
+    """Uniform G×G grid over the data/query bounding box."""
+    bbox: jnp.ndarray  # [4] f32 (xmin, ymin, xmax, ymax)
+    g: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_cells(self) -> int:
+        return self.g * self.g
+
+    def cell_width(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return ((self.bbox[2] - self.bbox[0]) / self.g,
+                (self.bbox[3] - self.bbox[1]) / self.g)
+
+
+def fit_grid(points_or_queries: np.ndarray, g: int,
+             margin: float = 1e-3) -> Grid:
+    """Fit the grid bbox over data points [N,2] or query rects [Q,4]."""
+    a = np.asarray(points_or_queries, dtype=np.float32)
+    if a.shape[-1] == 2:
+        lo, hi = a.min(axis=0), a.max(axis=0)
+    else:
+        lo = a[:, :2].min(axis=0)
+        hi = a[:, 2:].max(axis=0)
+    span = np.maximum(hi - lo, 1e-9)
+    bbox = np.concatenate([lo - margin * span, hi + margin * span])
+    return Grid(bbox=jnp.asarray(bbox, jnp.float32), g=int(g))
+
+
+def cell_range(grid: Grid, queries: jnp.ndarray) -> jnp.ndarray:
+    """[B, 4] query rects → [B, 4] i32 (cx0, cy0, cx1, cy1) cell index ranges."""
+    q = queries.astype(jnp.float32)
+    cw, ch = grid.cell_width()
+    gx0, gy0 = grid.bbox[0], grid.bbox[1]
+    cx0 = jnp.clip(jnp.floor((q[:, 0] - gx0) / cw), 0, grid.g - 1)
+    cy0 = jnp.clip(jnp.floor((q[:, 1] - gy0) / ch), 0, grid.g - 1)
+    cx1 = jnp.clip(jnp.floor((q[:, 2] - gx0) / cw), 0, grid.g - 1)
+    cy1 = jnp.clip(jnp.floor((q[:, 3] - gy0) / ch), 0, grid.g - 1)
+    return jnp.stack([cx0, cy0, cx1, cy1], axis=-1).astype(jnp.int32)
+
+
+def cells_of_queries(grid: Grid, queries: jnp.ndarray, max_cells: int
+                     ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Overlapped cell ids per query, statically bounded.
+
+    ``max_cells`` must be a perfect square (the window is √max × √max).
+    Returns ``(cell_ids [B, max_cells] i32, valid [B, max_cells] bool,
+    overflow [B] bool)``. ``overflow`` marks queries spanning a wider cell
+    window than the static bound — those take the exact R-tree path (the
+    same escape hatch as the paper's misprediction rule). In the paper's
+    workloads queries are tiny relative to cells, so 2×2 suffices (a rect
+    overlaps at most 4 cells unless it is wider than a cell).
+    """
+    side = int(round(np.sqrt(max_cells)))
+    assert side * side == max_cells, "max_cells must be a perfect square"
+    B = queries.shape[0]
+    cr = cell_range(grid, queries)                          # [B, 4]
+    nx = cr[:, 2] - cr[:, 0] + 1                            # [B]
+    ny = cr[:, 3] - cr[:, 1] + 1
+    d = jnp.arange(side, dtype=jnp.int32)
+    # side×side window anchored at (cx0, cy0); offsets clamped into range so
+    # every id is in-bounds (duplicates are masked by ``valid``).
+    ox = jnp.minimum(d[None, :], nx[:, None] - 1)           # [B, side]
+    oy = jnp.minimum(d[None, :], ny[:, None] - 1)
+    cx = cr[:, 0:1] + ox
+    cy = cr[:, 1:2] + oy
+    ids = (cy[:, :, None] * grid.g + cx[:, None, :]).reshape(B, -1)
+    valid = ((d[None, :, None] < ny[:, None, None])
+             & (d[None, None, :] < nx[:, None, None])).reshape(B, -1)
+    overflow = (nx > side) | (ny > side)
+    return ids, valid & ~overflow[:, None], overflow
+
+
+def bucket_queries_by_cell(grid: Grid, queries: np.ndarray, max_cells: int
+                           ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host twin of ``cells_of_queries`` (used at training time)."""
+    ids, valid, overflow = jax.jit(
+        cells_of_queries, static_argnames=("max_cells",))(
+            grid, jnp.asarray(queries, jnp.float32), max_cells=max_cells)
+    return np.asarray(ids), np.asarray(valid), np.asarray(overflow)

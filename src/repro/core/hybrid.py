@@ -1,0 +1,87 @@
+"""The "AI+R"-tree (paper §IV): router-dispatched hybrid of AI- and R-paths.
+
+For each query the binary router predicts high-/low-overlap; high-overlap
+queries take the AI path (predicted leaves only), low-overlap queries take
+the classical R path. AI-path queries whose prediction is unusable fall back
+to the R path (exactness). Per-query *leaf access* counts are tracked the
+way the paper costs them: the AI path pays its predicted accesses, plus the
+full R-tree visit set if it had to fall back.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aitree import AITree, ai_query
+from repro.core.classifiers.router import Router, route_high
+from repro.core.device_tree import DeviceTree
+from repro.core import traversal
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HybridTree:
+    tree: DeviceTree
+    ait: AITree
+    router: Router
+
+
+class HybridResult(NamedTuple):
+    routed_high: jnp.ndarray    # [B] router verdict (True → AI path)
+    used_ai: jnp.ndarray        # [B] answered by the AI path (no fallback)
+    n_results: jnp.ndarray      # [B] qualifying points
+    result_ids: jnp.ndarray     # [B, max_results]
+    leaf_accesses: jnp.ndarray  # [B] paper cost unit (leaf I/Os)
+    n_visited_r: jnp.ndarray    # [B] classical visit count (for α / reporting)
+    n_true: jnp.ndarray         # [B] true leaf count
+
+
+@functools.partial(jax.jit, static_argnames=("max_visited", "max_results",
+                                             "use_kernel", "force_path"))
+def hybrid_query(h: HybridTree, queries: jnp.ndarray, *,
+                 max_visited: int = 256, max_results: int = 512,
+                 use_kernel: bool = False, force_path: str = "auto"
+                 ) -> HybridResult:
+    """Masked single-dispatch execution of both paths.
+
+    ``force_path``: "auto" (router), "ai" (AI-tree only + fallback), or "r"
+    (classical only) — the latter two give the paper's standalone baselines.
+    """
+    queries = queries.astype(jnp.float32)
+    B = queries.shape[0]
+
+    if force_path == "r":
+        high = jnp.zeros((B,), bool)
+    elif force_path == "ai":
+        high = jnp.ones((B,), bool)
+    else:
+        high = route_high(h.router, queries)
+
+    ai = ai_query(h.ait, h.tree, queries, max_results=max_results,
+                  use_kernel=use_kernel)
+    r = traversal.range_query(h.tree, queries, max_visited=max_visited,
+                              max_results=max_results, use_kernel=use_kernel)
+
+    used_ai = high & ~ai.fallback
+    n_results = jnp.where(used_ai, ai.n_results, r.n_results)
+    result_ids = jnp.where(used_ai[:, None], ai.result_ids, r.result_ids)
+    # cost accounting (paper §IV-A): AI path pays prediction + its accesses;
+    # a fallback additionally pays the classical visit set.
+    leaf_accesses = jnp.where(
+        high,
+        ai.n_pred + jnp.where(ai.fallback, r.n_visited, 0),
+        r.n_visited,
+    )
+    return HybridResult(
+        routed_high=high,
+        used_ai=used_ai,
+        n_results=n_results,
+        result_ids=result_ids,
+        leaf_accesses=leaf_accesses,
+        n_visited_r=r.n_visited,
+        n_true=r.n_true,
+    )

@@ -1,0 +1,95 @@
+"""Training-data preparation for the AI-tree (paper §III-A3..5).
+
+Step 1: execute the query workload on the (device-form) R-tree, capturing for
+every query the *visited* leaf IDs and the *true* leaf IDs (Table I).
+Step 2: the query rectangle is the feature vector, the true leaf IDs are the
+multi-hot class labels (Table II — one-hot per leaf, unioned).
+
+Everything is batched through ``traversal.range_query`` — the DeviceTree's
+leaf order *is* the paper's DFS leaf-ID order, so mask columns are labels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.device_tree import DeviceTree
+from repro.core import traversal
+
+# The α buckets the paper evaluates on (§V-B2).
+PAPER_ALPHA_BUCKETS = (0.1, 0.25, 0.5, 0.75, 1.0)
+
+
+@dataclasses.dataclass
+class Workload:
+    """A labelled query workload over one tree."""
+    queries: np.ndarray        # [Q, 4] f32
+    visited: np.ndarray        # [Q, L] bool
+    true_labels: np.ndarray    # [Q, L] bool — the multi-hot classifier target
+    n_visited: np.ndarray      # [Q] i32
+    n_true: np.ndarray         # [Q] i32
+    n_results: np.ndarray      # [Q] i32
+    alpha: np.ndarray          # [Q] f32
+
+    @property
+    def n_queries(self) -> int:
+        return int(self.queries.shape[0])
+
+    @property
+    def n_leaves(self) -> int:
+        return int(self.true_labels.shape[1])
+
+    def bucket(self, buckets: Iterable[float] = PAPER_ALPHA_BUCKETS) -> np.ndarray:
+        """Assign each query to the nearest α bucket (paper reports per-bucket)."""
+        b = np.asarray(list(buckets), dtype=np.float32)
+        return b[np.argmin(np.abs(self.alpha[:, None] - b[None, :]), axis=1)]
+
+    def high_overlap(self, tau: float = 0.75) -> np.ndarray:
+        """Label 0/1 split of §IV: high-overlap ⇔ α ≤ τ."""
+        return self.alpha <= tau
+
+    def subset(self, idx: np.ndarray) -> "Workload":
+        return Workload(
+            queries=self.queries[idx], visited=self.visited[idx],
+            true_labels=self.true_labels[idx], n_visited=self.n_visited[idx],
+            n_true=self.n_true[idx], n_results=self.n_results[idx],
+            alpha=self.alpha[idx])
+
+
+def make_workload(tree: DeviceTree, queries: np.ndarray, *,
+                  batch_size: int = 256, max_visited: int = 256,
+                  max_results: int = 1024, use_kernel: bool = False) -> Workload:
+    """Run the workload through the batched traversal and collect labels."""
+    queries = np.asarray(queries, dtype=np.float32)
+    Q = queries.shape[0]
+    vis, tru, nv, nt, nr = [], [], [], [], []
+    for o in range(0, Q, batch_size):
+        qb = queries[o:o + batch_size]
+        pad = batch_size - qb.shape[0]
+        if pad:
+            qb = np.concatenate([qb, np.zeros((pad, 4), np.float32)], axis=0)
+        res = traversal.range_query(
+            tree, jnp.asarray(qb), max_visited=max_visited,
+            max_results=max_results, use_kernel=use_kernel)
+        take = qb.shape[0] - pad
+        vis.append(np.asarray(res.visited)[:take])
+        tru.append(np.asarray(res.true_leaves)[:take])
+        nv.append(np.asarray(res.n_visited)[:take])
+        nt.append(np.asarray(res.n_true)[:take])
+        nr.append(np.asarray(res.n_results)[:take])
+    n_visited = np.concatenate(nv)
+    n_true = np.concatenate(nt)
+    a = np.where(n_visited > 0, n_true / np.maximum(n_visited, 1), 1.0)
+    return Workload(
+        queries=queries,
+        visited=np.concatenate(vis),
+        true_labels=np.concatenate(tru),
+        n_visited=n_visited,
+        n_true=n_true,
+        n_results=np.concatenate(nr),
+        alpha=a.astype(np.float32),
+    )

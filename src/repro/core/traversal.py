@@ -1,0 +1,168 @@
+"""Batched, level-synchronous R-tree range queries on device.
+
+This is the TPU-native replacement for root-to-leaf pointer chasing: the
+frontier at each level is a ``[B, N_l]`` boolean mask; expansion to the next
+level is one gather (child → parent) plus one batched rectangle-intersection.
+
+The intersection hot-spot runs through the Pallas kernel
+(``repro.kernels.mbr_intersect``) when ``use_kernel=True``; the pure-jnp path
+doubles as its oracle.
+
+Also implements the *refinement* step (exact point-in-rect filtering of the
+visited/predicted leaves) and the overlap ratio α = TN/VN (§III-A2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry as geo
+from repro.core.device_tree import DeviceTree
+
+
+def _cross_intersect(queries: jnp.ndarray, mbrs: jnp.ndarray,
+                     use_kernel: bool) -> jnp.ndarray:
+    """[B,4] × [N,4] → [B,N] bool."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.mbr_intersect(queries, mbrs)
+    return geo.jnp_cross_intersects(queries, mbrs)
+
+
+def visited_leaf_mask(tree: DeviceTree, queries: jnp.ndarray,
+                      use_kernel: bool = False) -> jnp.ndarray:
+    """Leaves the classical R-tree would visit for each query: [B, L] bool.
+
+    Exactly reproduces the recursive traversal's visited set: a leaf is
+    visited iff every ancestor MBR (and its own) intersects the query.
+    """
+    mask = _cross_intersect(queries, tree.levels[0].mbrs, use_kernel)  # [B, 1]
+    for level in tree.levels[1:]:
+        parent_alive = mask[:, level.parent]                 # [B, N_l]
+        hit = _cross_intersect(queries, level.mbrs, use_kernel)
+        mask = parent_alive & hit
+    return mask
+
+
+class RefineResult(NamedTuple):
+    counts: jnp.ndarray      # [B, K] qualifying points per (query, leaf slot)
+    inside: jnp.ndarray      # [B, K, M_pad] bool, per-entry containment
+    leaf_idx: jnp.ndarray    # [B, K] leaf ids refined (padding slots arbitrary)
+    valid: jnp.ndarray       # [B, K] slot validity
+
+
+def compact_mask(mask: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """[B, L] bool → (indices [B, k] i32, valid [B, k] bool).
+
+    Takes the first ``k`` set leaves per row (leaf-ID order — ``top_k`` on
+    equal keys prefers lower indices). Overflow beyond ``k`` is reported by
+    the caller via ``overflowed()`` and handled by the exact fallback path.
+    """
+    k_eff = min(k, mask.shape[-1])
+    vals, idx = jax.lax.top_k(mask.astype(jnp.int32), k_eff)
+    if k_eff < k:  # pad slots so callers keep a static [B, k] shape
+        idx = jnp.pad(idx, ((0, 0), (0, k - k_eff)))
+        vals = jnp.pad(vals, ((0, 0), (0, k - k_eff)))
+    return idx.astype(jnp.int32), vals > 0
+
+
+def overflowed(mask: jnp.ndarray, k: int) -> jnp.ndarray:
+    """[B, L] → [B] bool: more than ``k`` leaves set (compact would truncate)."""
+    return jnp.sum(mask.astype(jnp.int32), axis=-1) > k
+
+
+def refine_leaves(tree: DeviceTree, queries: jnp.ndarray, leaf_idx: jnp.ndarray,
+                  valid: jnp.ndarray, use_kernel: bool = False) -> RefineResult:
+    """Exact containment test over the entries of selected leaves.
+
+    ``queries``: [B, 4]; ``leaf_idx``: [B, K]; ``valid``: [B, K].
+    Guarantees no false positives (paper §III-C): every reported entry is
+    re-checked against the query rectangle.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        inside = kops.leaf_refine(queries, tree.leaf_entries, leaf_idx, valid)
+    else:
+        pts = tree.leaf_entries[leaf_idx]                   # [B, K, M, 2]
+        inside = geo.jnp_contains_point(queries[:, None, None, :], pts)
+        inside = inside & valid[:, :, None]
+    counts = jnp.sum(inside.astype(jnp.int32), axis=-1)     # [B, K]
+    return RefineResult(counts=counts, inside=inside, leaf_idx=leaf_idx,
+                        valid=valid)
+
+
+class QueryResult(NamedTuple):
+    visited: jnp.ndarray        # [B, L] bool — classical visited set
+    true_leaves: jnp.ndarray    # [B, L] bool — leaves with qualifying points
+    n_visited: jnp.ndarray      # [B] i32
+    n_true: jnp.ndarray         # [B] i32
+    n_results: jnp.ndarray      # [B] i32 total qualifying points
+    result_ids: jnp.ndarray     # [B, max_results] i32, -1 padded
+    truncated: jnp.ndarray      # [B] bool — static bounds overflowed
+
+
+def scatter_rows(base: jnp.ndarray, idx: jnp.ndarray,
+                 vals: jnp.ndarray) -> jnp.ndarray:
+    """Rowwise scatter: base [B, L], idx [B, K], vals [B, K] → [B, L]."""
+    B = base.shape[0]
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    return base.at[rows, idx].max(vals)
+
+
+def gather_result_ids(tree: DeviceTree, refine: RefineResult,
+                      max_results: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Flatten qualifying entry ids to [B, max_results] (padded with -1)."""
+    ids = tree.leaf_entry_ids[refine.leaf_idx]              # [B, K, M]
+    B = ids.shape[0]
+    flat_ids = ids.reshape(B, -1)
+    flat_in = refine.inside.reshape(B, -1)
+    key = flat_in.astype(jnp.int32)
+    take, slot = jax.lax.top_k(key, max_results)            # first hits
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    out = jnp.where(take > 0, flat_ids[rows, slot], -1)
+    trunc = jnp.sum(flat_in.astype(jnp.int32), axis=-1) > max_results
+    return out, trunc
+
+
+@functools.partial(jax.jit, static_argnames=("max_visited", "max_results",
+                                             "use_kernel"))
+def range_query(tree: DeviceTree, queries: jnp.ndarray, *,
+                max_visited: int = 256, max_results: int = 512,
+                use_kernel: bool = False) -> QueryResult:
+    """Full classical batched range query: traverse → compact → refine.
+
+    This is the **R** path of the "AI+R"-tree. It also produces the
+    (visited, true) leaf sets that define α and the training labels.
+    """
+    queries = queries.astype(jnp.float32)
+    visited = visited_leaf_mask(tree, queries, use_kernel)   # [B, L]
+    leaf_idx, valid = compact_mask(visited, max_visited)
+    ref = refine_leaves(tree, queries, leaf_idx, valid, use_kernel)
+    B, L = visited.shape
+    true_rows = scatter_rows(
+        jnp.zeros((B, L), dtype=jnp.int32), leaf_idx,
+        (ref.counts > 0).astype(jnp.int32) * valid.astype(jnp.int32))
+    true_leaves = true_rows > 0
+    result_ids, trunc_r = gather_result_ids(tree, ref, max_results)
+    trunc_v = overflowed(visited, max_visited)
+    return QueryResult(
+        visited=visited,
+        true_leaves=true_leaves,
+        n_visited=jnp.sum(visited.astype(jnp.int32), axis=-1),
+        n_true=jnp.sum(true_leaves.astype(jnp.int32), axis=-1),
+        n_results=jnp.sum(ref.counts * valid.astype(jnp.int32), axis=-1),
+        result_ids=result_ids,
+        truncated=trunc_v | trunc_r,
+    )
+
+
+def alpha(n_true: jnp.ndarray, n_visited: jnp.ndarray) -> jnp.ndarray:
+    """Overlap ratio α = TN(Q)/VN(Q) ∈ [0, 1] (§III-A2).
+
+    Queries that visit no leaves (empty region) get α = 1 — nothing was
+    extraneous, so they are maximally low-overlap.
+    """
+    return jnp.where(n_visited > 0, n_true / jnp.maximum(n_visited, 1), 1.0)

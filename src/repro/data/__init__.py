@@ -1,0 +1,1 @@
+"""Datasets and query-workload synthesis for the spatial engine."""

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: oblivious-decision-forest inference.
+
+The AI-tree's paper-faithful classifier family is decision trees. Pointer
+trees do not vectorize, so we use **oblivious** trees (one (feature,
+threshold) pair per depth level): evaluating a tree is
+
+    bit_d  = x[feat_d] > thresh_d                (VPU compares)
+    leaf   = Σ_d bit_d · 2^(D-1-d)               (integer dot)
+    scores = onehot(leaf) @ leaf_table           (MXU matmul)
+
+The [TB, 2^D] one-hot × [2^D, C] table matmul is the hot op and maps straight
+onto the MXU. The grid is (B-tiles, T trees) with T innermost so each output
+tile accumulates tree votes in VMEM without re-fetching.
+
+Inputs:
+  ``sel``    [B, T, D] f32 — pre-gathered feature values per tree/depth
+  ``thresh`` [T, D]   f32
+  ``tables`` [T, 2^D, C] f32 — per-leaf label votes
+Output:
+  ``scores`` [B, C] f32 — summed votes (caller normalizes by T)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEF_TB = 256
+
+
+def _kernel(sel_ref, th_ref, tbl_ref, o_ref):
+    t = pl.program_id(1)
+    sel = sel_ref[:, 0, :]                      # [TB, D]
+    th = th_ref[0, :]                           # [D]
+    D = sel.shape[-1]
+    bits = (sel > th[None, :]).astype(jnp.float32)
+    d_iota = jax.lax.broadcasted_iota(jnp.float32, (1, D), 1)
+    powers = jnp.exp2(jnp.float32(D - 1) - d_iota)          # [1, D]
+    leaf = jnp.sum(bits * powers, axis=-1).astype(jnp.int32)  # [TB]
+    n_leaves = tbl_ref.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (sel.shape[0], n_leaves), 1)
+    onehot = (iota == leaf[:, None]).astype(jnp.float32)               # [TB, 2^D]
+    votes = jnp.dot(onehot, tbl_ref[0, :, :],
+                    preferred_element_type=jnp.float32)                # [TB, C]
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[:, :] = votes
+
+    @pl.when(t > 0)
+    def _acc():
+        o_ref[:, :] += votes
+
+
+def _kernel_cells(sel_ref, th_ref, tbl_ref, o_ref):
+    """Per-cell accumulation variant: grid (B-tiles, C, T), output [TB, 1, Cl]
+    per cell — tree votes accumulate within a cell, not across cells."""
+    t = pl.program_id(2)
+    sel = sel_ref[:, 0, :]
+    th = th_ref[0, :]
+    D = sel.shape[-1]
+    bits = (sel > th[None, :]).astype(jnp.float32)
+    d_iota = jax.lax.broadcasted_iota(jnp.float32, (1, D), 1)
+    powers = jnp.exp2(jnp.float32(D - 1) - d_iota)
+    leaf = jnp.sum(bits * powers, axis=-1).astype(jnp.int32)
+    n_leaves = tbl_ref.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (sel.shape[0], n_leaves), 1)
+    onehot = (iota == leaf[:, None]).astype(jnp.float32)
+    votes = jnp.dot(onehot, tbl_ref[0, :, :],
+                    preferred_element_type=jnp.float32)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[:, 0, :] = votes
+
+    @pl.when(t > 0)
+    def _acc():
+        o_ref[:, 0, :] += votes
+
+
+@functools.partial(jax.jit, static_argnames=("n_cells", "tb", "interpret"))
+def forest_infer_cells(sel: jnp.ndarray, thresh: jnp.ndarray,
+                       tables: jnp.ndarray, *, n_cells: int, tb: int = DEF_TB,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Celled forests: sel [B, C·T, D], thresh [C·T, D], tables [C·T, 2^D, Cl]
+    → votes [B, C, Cl] (summed over each cell's T trees)."""
+    B, CT, D = sel.shape
+    n_leaves, Cl = tables.shape[1], tables.shape[2]
+    assert CT % n_cells == 0, (CT, n_cells)
+    T = CT // n_cells
+    assert B % tb == 0, (B, tb)
+    grid = (B // tb, n_cells, T)
+    return pl.pallas_call(
+        _kernel_cells,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, 1, D), lambda b, c, t: (b, c * T + t, 0)),
+            pl.BlockSpec((1, D), lambda b, c, t: (c * T + t, 0)),
+            pl.BlockSpec((1, n_leaves, Cl), lambda b, c, t: (c * T + t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1, Cl), lambda b, c, t: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n_cells, Cl), jnp.float32),
+        interpret=interpret,
+    )(sel.astype(jnp.float32), thresh.astype(jnp.float32),
+      tables.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def forest_infer(sel: jnp.ndarray, thresh: jnp.ndarray, tables: jnp.ndarray,
+                 *, tb: int = DEF_TB, interpret: bool = False) -> jnp.ndarray:
+    """sel [B,T,D], thresh [T,D], tables [T,2^D,C] → scores [B,C]."""
+    B, T, D = sel.shape
+    T2, n_leaves, C = tables.shape
+    assert T2 == T and n_leaves == 2 ** D, (tables.shape, D)
+    assert B % tb == 0, (B, tb)
+    grid = (B // tb, T)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, 1, D), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, D), lambda b, t: (t, 0)),
+            pl.BlockSpec((1, n_leaves, C), lambda b, t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, C), lambda b, t: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        interpret=interpret,
+    )(sel.astype(jnp.float32), thresh.astype(jnp.float32),
+      tables.astype(jnp.float32))

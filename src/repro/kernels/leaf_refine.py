@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: refinement of predicted/visited leaves.
+
+This kernel embodies the paper's core I/O saving on TPU: only the leaf tiles
+named in ``leaf_idx`` are pulled HBM→VMEM (via scalar-prefetch BlockSpec
+index maps); extraneous leaves generate **no memory traffic at all**. The
+per-entry containment test then runs on the VPU over the fetched tile.
+
+Inputs (planar entry layout — see mbr_intersect.py for rationale):
+  ``leaf_idx`` [B, K] i32   — leaves to refine per query (scalar-prefetched)
+  ``queries``  [B, 4] f32
+  ``ex``/``ey``[L, M] f32   — entry coordinates, +inf padded
+  ``valid``    [B, K] i32   — slot validity
+Output:
+  ``inside``   [B, K, M] bool — exact containment per fetched entry
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, q_ref, valid_ref, ex_ref, ey_ref, o_ref):
+    # q_ref: [1, 4]; ex/ey_ref: [1, M]; valid_ref: [1, 1]; o_ref: [1, 1, M]
+    x0 = q_ref[0, 0]
+    y0 = q_ref[0, 1]
+    x1 = q_ref[0, 2]
+    y1 = q_ref[0, 3]
+    ex = ex_ref[0, :]
+    ey = ey_ref[0, :]
+    ok = (ex >= x0) & (ex <= x1) & (ey >= y0) & (ey <= y1)
+    o_ref[0, 0, :] = ok & (valid_ref[0, 0] > 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def leaf_refine(queries: jnp.ndarray, ex: jnp.ndarray, ey: jnp.ndarray,
+                leaf_idx: jnp.ndarray, valid: jnp.ndarray, *,
+                interpret: bool = False) -> jnp.ndarray:
+    """queries [B,4], ex/ey [L,M], leaf_idx [B,K], valid [B,K] → [B,K,M]."""
+    B, K = leaf_idx.shape
+    L, M = ex.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda b, k, idx: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, k, idx: (b, k)),
+            pl.BlockSpec((1, M), lambda b, k, idx: (idx[b, k], 0)),
+            pl.BlockSpec((1, M), lambda b, k, idx: (idx[b, k], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, M), lambda b, k, idx: (b, k, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, M), jnp.bool_),
+        interpret=interpret,
+    )(leaf_idx.astype(jnp.int32), queries.astype(jnp.float32),
+      valid.astype(jnp.int32), ex.astype(jnp.float32), ey.astype(jnp.float32))

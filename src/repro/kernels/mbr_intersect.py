@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: batched rectangle-intersection mask.
+
+``queries`` [B, 4] × ``mbrs`` [N, 4] → [B, N] bool. This is the innermost op
+of every traversal level and of grid-cell routing — the spatial analogue of a
+matmul's MACs. The kernel tiles B and N so both operand tiles and the [TB, TN]
+output tile live in VMEM; the comparison runs on the VPU with the lane
+dimension over N (TN multiple of 128).
+
+Layout note: rectangles are passed *transposed* as four planar vectors
+(xmin/ymin/xmax/ymax), i.e. ``q_t`` [4, B] and ``m_t`` [4, N]. A [B, 4]
+array would waste a 128-lane register row per rectangle; the planar layout
+broadcasts each coordinate across lanes for free. ``ops.py`` handles the
+transpose + padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEF_TB = 256   # query-tile (sublane axis)
+DEF_TN = 512   # mbr-tile (lane axis, multiple of 128)
+
+
+def _kernel(q_ref, m_ref, o_ref):
+    # q_ref: [4, TB] f32; m_ref: [4, TN] f32; o_ref: [TB, TN] bool
+    qx0 = q_ref[0, :][:, None]   # [TB, 1]
+    qy0 = q_ref[1, :][:, None]
+    qx1 = q_ref[2, :][:, None]
+    qy1 = q_ref[3, :][:, None]
+    mx0 = m_ref[0, :][None, :]   # [1, TN]
+    my0 = m_ref[1, :][None, :]
+    mx1 = m_ref[2, :][None, :]
+    my1 = m_ref[3, :][None, :]
+    o_ref[:, :] = (qx0 <= mx1) & (mx0 <= qx1) & (qy0 <= my1) & (my0 <= qy1)
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "tn", "interpret"))
+def mbr_intersect_t(q_t: jnp.ndarray, m_t: jnp.ndarray, *, tb: int = DEF_TB,
+                    tn: int = DEF_TN, interpret: bool = False) -> jnp.ndarray:
+    """Transposed-layout entry point: ``q_t`` [4, B], ``m_t`` [4, N] → [B, N].
+
+    B must be a multiple of ``tb`` and N of ``tn`` (ops.py pads).
+    """
+    _, B = q_t.shape
+    _, N = m_t.shape
+    assert B % tb == 0 and N % tn == 0, (B, N, tb, tn)
+    grid = (B // tb, N // tn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, tb), lambda i, j: (0, i)),
+            pl.BlockSpec((4, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tb, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.bool_),
+        interpret=interpret,
+    )(q_t.astype(jnp.float32), m_t.astype(jnp.float32))

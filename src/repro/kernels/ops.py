@@ -1,0 +1,154 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Responsibilities:
+  * pad irregular shapes up to kernel tile multiples and slice results back;
+  * transpose rectangles to the planar [4, N] kernel layout;
+  * dispatch to interpret mode off-TPU (this container is CPU-only — the
+    kernels are *targeted* at TPU and *validated* via interpret mode);
+  * fall back to the jnp oracle when ``REPRO_KERNELS=off`` (escape hatch).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels import mbr_intersect as _mbr
+from repro.kernels import leaf_refine as _refine
+from repro.kernels import forest_infer as _forest
+from repro.kernels import wkv6 as _wkv6
+
+
+def kernels_enabled() -> bool:
+    return os.environ.get("REPRO_KERNELS", "on").lower() not in ("off", "0")
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def mbr_intersect(queries: jnp.ndarray, mbrs: jnp.ndarray,
+                  tb: int | None = None, tn: int | None = None) -> jnp.ndarray:
+    """[B, 4] × [N, 4] → [B, N] bool."""
+    if not kernels_enabled():
+        return ref.mbr_intersect(queries, mbrs)
+    B, N = queries.shape[0], mbrs.shape[0]
+    tb = tb or min(_mbr.DEF_TB, max(8, B))
+    tn = tn or _mbr.DEF_TN
+    # pad with rectangles that can never intersect (inverted infinite rects)
+    qp = _pad_to(queries.astype(jnp.float32), 0, tb, 0.0)
+    never = jnp.asarray([jnp.inf, jnp.inf, -jnp.inf, -jnp.inf], jnp.float32)
+    mp = _pad_to(mbrs.astype(jnp.float32), 0, tn, 0.0)
+    if mp.shape[0] != N:
+        mp = mp.at[N:].set(never)
+    out = _mbr.mbr_intersect_t(qp.T, mp.T, tb=tb, tn=tn,
+                               interpret=_interpret())
+    return out[:B, :N]
+
+
+def leaf_refine(queries: jnp.ndarray, leaf_entries: jnp.ndarray,
+                leaf_idx: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """queries [B,4], leaf_entries [L,M,2], leaf_idx [B,K], valid [B,K]
+    → inside [B, K, M] bool."""
+    ex = leaf_entries[..., 0]
+    ey = leaf_entries[..., 1]
+    if not kernels_enabled():
+        return ref.leaf_refine(queries, ex, ey, leaf_idx, valid)
+    # clamp padded slots to leaf 0 (masked out by ``valid`` in-kernel)
+    safe_idx = jnp.clip(leaf_idx, 0, ex.shape[0] - 1)
+    return _refine.leaf_refine(queries, ex, ey, safe_idx, valid,
+                               interpret=_interpret())
+
+
+def forest_infer(features: jnp.ndarray, feat_idx: jnp.ndarray,
+                 thresh: jnp.ndarray, tables: jnp.ndarray,
+                 tb: int | None = None) -> jnp.ndarray:
+    """features [B,F], feat_idx [T,D] i32, thresh [T,D], tables [T,2^D,C]
+    → scores [B,C] (summed votes)."""
+    B = features.shape[0]
+    sel = features[:, feat_idx]                 # [B, T, D] pre-gather
+    if not kernels_enabled():
+        return ref.forest_infer(sel, thresh, tables)
+    tb = tb or min(_forest.DEF_TB, max(8, B))
+    selp = _pad_to(sel, 0, tb, 0.0)
+    out = _forest.forest_infer(selp, thresh, tables, tb=tb,
+                               interpret=_interpret())
+    return out[:B]
+
+
+def forest_infer_cells(features: jnp.ndarray, feat_idx: jnp.ndarray,
+                       thresh: jnp.ndarray, tables: jnp.ndarray,
+                       n_cells: int, tb: int | None = None) -> jnp.ndarray:
+    """Celled variant: feat_idx/thresh [C·T, D], tables [C·T, 2^D, Cl]
+    → votes [B, C, Cl] (per-cell tree-vote sums)."""
+    B = features.shape[0]
+    sel = features[:, feat_idx]                 # [B, C·T, D]
+    if not kernels_enabled():
+        T = feat_idx.shape[0] // n_cells
+        flat = ref.forest_infer_percell(sel, thresh, tables)
+        return flat.reshape(B, n_cells, T, -1).sum(axis=2)
+    tb = tb or min(_forest.DEF_TB, max(8, B))
+    selp = _pad_to(sel, 0, tb, 0.0)
+    out = _forest.forest_infer_cells(selp, thresh, tables, n_cells=n_cells,
+                                     tb=tb, interpret=_interpret())
+    return out[:B]
+
+
+def _wkv6_kernel_padded(r, k, v, w, u, chunk):
+    T = r.shape[1]
+    if T % chunk != 0:
+        # pad time with identity steps (w=1, k=0 → state & outputs unaffected)
+        pad = (-T) % chunk
+        r2 = _pad_to(r, 1, chunk, 0.0)
+        k2 = _pad_to(k, 1, chunk, 0.0)
+        v2 = _pad_to(v, 1, chunk, 0.0)
+        w2 = jnp.pad(w, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        out = _wkv6.wkv6(r2, k2, v2, w2, u, chunk=chunk,
+                         interpret=_interpret())
+        return out[:, :T]
+    return _wkv6.wkv6(r, k, v, w, u, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _wkv6_ad(r, k, v, w, u, chunk):
+    return _wkv6_kernel_padded(r, k, v, w, u, chunk)
+
+
+def _wkv6_fwd(r, k, v, w, u, chunk):
+    return _wkv6_kernel_padded(r, k, v, w, u, chunk), (r, k, v, w, u)
+
+
+def _wkv6_bwd(chunk, res, ct):
+    # Backward through the pure-jnp oracle (recompute); a dedicated backward
+    # kernel is a known optimization left on the table — see EXPERIMENTS.md.
+    _, vjp = jax.vjp(ref.wkv6, *res)
+    return vjp(ct)
+
+
+_wkv6_ad.defvjp(_wkv6_fwd, _wkv6_bwd)
+
+
+def wkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+         u: jnp.ndarray, chunk: int = _wkv6.DEF_CHUNK) -> jnp.ndarray:
+    """RWKV-6 scan: r/k/w [BH,T,dk], v [BH,T,dv], u [BH,dk] → y [BH,T,dv].
+
+    Differentiable: forward runs the chunked Pallas kernel; the VJP
+    recomputes through the sequential reference (checkpoint-style).
+    """
+    if not kernels_enabled():
+        return ref.wkv6(r, k, v, w, u)
+    return _wkv6_ad(r, k, v, w, u, chunk)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function has identical semantics to its kernel twin; kernel tests sweep
+shapes/dtypes and ``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mbr_intersect(queries: jnp.ndarray, mbrs: jnp.ndarray) -> jnp.ndarray:
+    """[B, 4] × [N, 4] → [B, N] bool (closed-rectangle intersection)."""
+    q = queries[:, None, :].astype(jnp.float32)
+    m = mbrs[None, :, :].astype(jnp.float32)
+    return (
+        (q[..., 0] <= m[..., 2]) & (m[..., 0] <= q[..., 2])
+        & (q[..., 1] <= m[..., 3]) & (m[..., 1] <= q[..., 3])
+    )
+
+
+def leaf_refine(queries: jnp.ndarray, ex: jnp.ndarray, ey: jnp.ndarray,
+                leaf_idx: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """queries [B,4], ex/ey [L,M], leaf_idx [B,K], valid [B,K] → [B,K,M]."""
+    gx = ex[leaf_idx].astype(jnp.float32)       # [B, K, M]
+    gy = ey[leaf_idx].astype(jnp.float32)
+    q = queries.astype(jnp.float32)
+    x0, y0, x1, y1 = (q[:, i][:, None, None] for i in range(4))
+    ok = (gx >= x0) & (gx <= x1) & (gy >= y0) & (gy <= y1)
+    return ok & (valid[:, :, None] > 0)
+
+
+def forest_infer(sel: jnp.ndarray, thresh: jnp.ndarray,
+                 tables: jnp.ndarray) -> jnp.ndarray:
+    """sel [B,T,D], thresh [T,D], tables [T,2^D,C] → scores [B,C]."""
+    B, T, D = sel.shape
+    bits = (sel.astype(jnp.float32) > thresh[None].astype(jnp.float32))
+    powers = 2 ** jnp.arange(D - 1, -1, -1, dtype=jnp.int32)
+    leaf = jnp.sum(bits.astype(jnp.int32) * powers[None, None, :], axis=-1)
+    # [B, T] leaf ids → gather votes per tree, sum over trees
+    votes = jax.vmap(lambda tb, lf: tb[lf], in_axes=(0, 1),
+                     out_axes=1)(tables.astype(jnp.float32), leaf)  # [B,T,C]
+    return jnp.sum(votes, axis=1)
+
+
+def forest_infer_percell(sel: jnp.ndarray, thresh: jnp.ndarray,
+                         tables: jnp.ndarray) -> jnp.ndarray:
+    """Per-tree votes (no cross-tree sum): sel [B,T,D] → [B, T, C]."""
+    B, T, D = sel.shape
+    bits = (sel.astype(jnp.float32) > thresh[None].astype(jnp.float32))
+    powers = 2 ** jnp.arange(D - 1, -1, -1, dtype=jnp.int32)
+    leaf = jnp.sum(bits.astype(jnp.int32) * powers[None, None, :], axis=-1)
+    return jax.vmap(lambda tb, lf: tb[lf], in_axes=(0, 1),
+                    out_axes=1)(tables.astype(jnp.float32), leaf)
+
+
+def wkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+         u: jnp.ndarray) -> jnp.ndarray:
+    """Naive sequential RWKV-6 scan.
+
+    r/k/w: [BH, T, dk], v: [BH, T, dv], u: [BH, dk] → y [BH, T, dv]
+        y_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+        S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    """
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+    BH, T, dk = r.shape
+    dv = v.shape[-1]
+
+    def one(rb, kb, vb, wb, ub):
+        def step(S, inp):
+            rt, kt, vt, wt = inp
+            kv = kt[:, None] * vt[None, :]                # [dk, dv]
+            yt = rt @ (S + ub[:, None] * kv)              # [dv]
+            return wt[:, None] * S + kv, yt
+
+        S0 = jnp.zeros((dk, dv), jnp.float32)
+        _, yb = jax.lax.scan(step, S0, (rb, kb, vb, wb))
+        return yb
+
+    return jax.vmap(one)(r, k, v, w, u)

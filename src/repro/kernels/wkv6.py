@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: chunked RWKV-6 (Finch) linear-attention scan.
+
+Recurrence per head (state S ∈ R[dk, dv], data-dependent per-channel decay
+w_t ∈ (0,1)^dk, bonus u ∈ R^dk):
+
+    y_t = (r_t ⊙ 1) · (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+    S_t = diag(w_t) · S_{t-1} + k_t v_tᵀ
+
+A naive scan is O(T) sequential steps of rank-1 updates — memory-bound and
+MXU-hostile. The chunked form processes C tokens per step:
+
+  inter:  y_i += (r_i ⊙ exp(cum_i)) @ S0              (MXU, exponent ≤ 0 ⇒ stable)
+  intra:  y_i += Σ_{j<i} [Σ_c r_ic k_jc e^{cum_ic − cum_{j+1,c}}] v_j
+  bonus:  y_i += (r_i ⊙ u ⊙ k_i) · v_i
+  state:  S ← diag(e^{cum_C}) S0 + (k ⊙ e^{cum_C − cum_{j+1}})ᵀ v   (stable matmul)
+
+where cum_i = Σ_{s<i} log w_s (exclusive). The intra term keeps the exponent
+per-channel and ≤ 0, so it is **exactly stable** for arbitrarily strong decay
+(no FLA-style overflow risk); it runs on the VPU as a [C, C, dk] contraction.
+The grid is (B·H, T/C); the state lives in a VMEM scratch ref that persists
+across the sequential chunk dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEF_CHUNK = 64
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_ref):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[:, :] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)            # [C, dk]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)            # [C, dv]
+    w = w_ref[0].astype(jnp.float32)            # [C, dk] decay ∈ (0,1)
+    u = u_ref[0].astype(jnp.float32)            # [dk]
+    S0 = s_ref[:, :]                            # [dk, dv]
+
+    C = r.shape[0]
+    logw = jnp.log(w)
+    cum_inc = jnp.cumsum(logw, axis=0)          # cum_{i+1} (inclusive)
+    cum = cum_inc - logw                        # cum_i (exclusive), cum_0 = 0
+
+    # --- inter-chunk: contribution of carried state
+    r_dec = r * jnp.exp(cum)                    # exponent ≤ 0
+    y = jnp.dot(r_dec, S0, preferred_element_type=jnp.float32)   # [C, dv]
+
+    # --- intra-chunk: strictly-causal pairwise scores (stable, per-channel)
+    # scores[i, j] = Σ_c r[i,c] k[j,c] exp(cum[i,c] − cum_inc[j,c]),  j < i
+    expo = cum[:, None, :] - cum_inc[None, :, :]          # [C, C, dk]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    expo = jnp.where(causal[:, :, None], expo, -jnp.inf)  # exponent ≤ 0
+    scores = jnp.sum(r[:, None, :] * k[None, :, :] * jnp.exp(expo), axis=-1)
+    y = y + jnp.dot(scores, v, preferred_element_type=jnp.float32)
+
+    # --- bonus (current token) term: y_i += (Σ_c r_ic u_c k_ic) v_i
+    bonus = jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True)  # [C, 1]
+    y = y + bonus * v
+
+    y_ref[0, :, :] = y.astype(y_ref.dtype)
+
+    # --- state update (stable: exponents ≤ 0)
+    total = cum_inc[-1, :]                                 # [dk]
+    k_dec = k * jnp.exp(total[None, :] - cum_inc)          # [C, dk]
+    s_ref[:, :] = jnp.exp(total)[:, None] * S0 + jnp.dot(
+        k_dec.T, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+         u: jnp.ndarray, *, chunk: int = DEF_CHUNK,
+         interpret: bool = False) -> jnp.ndarray:
+    """r/k/w: [BH, T, dk], v: [BH, T, dv], u: [BH, dk] → y [BH, T, dv]."""
+    BH, T, dk = r.shape
+    dv = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    grid = (BH, T // chunk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dk), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, dv), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required for the dry-run's
+``xla_force_host_platform_device_count`` trick to work.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *,
+                    multi_pod: bool = False):
+    """Small mesh for CPU multi-device tests (host platform device count)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """The axes the global batch shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,165 @@
+"""Parameter/activation sharding rules for the production mesh.
+
+Strategy (baseline, iterated in EXPERIMENTS.md §Perf):
+  * TP over ``model``: attention head·d_head projections, FFN hidden dim,
+    expert dim (EP), vocab dim of embedding/lm_head;
+  * FSDP over ``data``: the d_model axis of every large matrix (ZeRO-3
+    style — parameters, grads and optimizer state all shard the same way);
+  * replicate across ``pod`` (pure DP between pods);
+  * anything small (norms, biases under ~d, LoRA factors) is replicated.
+
+Rules are name-keyed over the flattened pytree path, with divisibility
+checks — a dim that does not divide its mesh axis is replicated rather than
+mis-sharded (e.g. 8 KV heads on a 16-way model axis ⇒ the flattened
+``kv_dim`` axis shards 16-way instead, which every assigned config divides).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# (regex over "a/b/c" path, spec over the LAST ndim dims of the leaf)
+# The leading scan/layer dim (when present) is always unsharded: rules are
+# written against the trailing dims and left-padded with None.
+_RULES: list[tuple[str, tuple]] = [
+    # embeddings
+    (r"(^|/)embed$", ("model", "data")),
+    (r"(^|/)lm_head$", ("data", "model")),
+    (r"(^|/)enc_pos$", (None, None)),        # 1500 rows — replicated
+    (r"(^|/)dec_pos$", ("data", None)),      # 32768 rows — shard positions
+    # attention (GQA + biases)
+    (r"/attn/wq$", ("data", "model")),
+    (r"/attn/wk$", ("data", "model")),
+    (r"/attn/wv$", ("data", "model")),
+    (r"/attn/wo$", ("model", "data")),
+    (r"/attn/b[qkv]$", ("model",)),
+    (r"/xattn/w[qkv]$", ("data", "model")),
+    (r"/xattn/wo$", ("model", "data")),
+    (r"/xattn/b[qkv]$", ("model",)),
+    # MLA
+    (r"/attn/wq_a$", ("data", None)),
+    (r"/attn/wq_b$", (None, "model")),
+    (r"/attn/wkv_a$", ("data", None)),
+    (r"/attn/wkv_b$", (None, "model")),
+    # dense MLP
+    (r"/mlp/wi$", ("data", "model")),
+    (r"/mlp/wg$", ("data", "model")),
+    (r"/mlp/wo2$", ("model", "data")),
+    # MoE: experts over model (EP), d_model over data
+    (r"/moe/router$", ("data", None)),
+    (r"/moe/w[ig]$", ("model", "data", None)),
+    (r"/moe/wo$", ("model", None, "data")),
+    (r"/moe/sh_w[ig]$", ("data", "model")),
+    (r"/moe/sh_wo$", ("model", "data")),
+    # rwkv6
+    (r"/w[rkvg]$", ("data", "model")),
+    (r"/wo$", ("model", "data")),
+    (r"/wck$", ("data", "model")),
+    (r"/wcv$", ("model", "data")),
+    (r"/wcr$", ("data", "model")),
+    # mamba (hymba)
+    (r"/ssm/w_in$", ("data", "model")),
+    (r"/ssm/w_out$", ("model", "data")),
+    (r"/ssm/w_[BC]$", ("model", None)),
+    (r"/ssm/A_log$", ("model", None)),
+    (r"/ssm/conv_[wb]$", (None, "model")),
+    (r"/ssm/D$", ("model",)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        for attr in ("key", "idx", "name"):
+            if hasattr(p, attr):
+                parts.append(str(getattr(p, attr)))
+                break
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for_leaf(path: str, shape: tuple, mesh) -> P:
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for pat, dims in _RULES:
+        if re.search(pat, path):
+            nd = len(shape)
+            full = (None,) * (nd - len(dims)) + tuple(dims)
+            fixed = []
+            for dim_size, ax in zip(shape, full):
+                if ax is None or ax not in axis_size:
+                    fixed.append(None)
+                    continue
+                # FSDP extends over the pod axis on multi-pod meshes
+                # (ZeRO across pods — halves per-chip state at 2 pods)
+                if ax == "data" and "pod" in axis_size:
+                    n2 = axis_size["data"] * axis_size["pod"]
+                    if dim_size % n2 == 0:
+                        fixed.append(("pod", "data"))
+                        continue
+                if dim_size % axis_size[ax] == 0:
+                    fixed.append(ax)
+                else:
+                    fixed.append(None)   # divisibility fallback: replicate
+            return P(*fixed)
+    return P()  # norms, scalars, small tensors: replicated
+
+
+def params_shardings(params: Any, mesh) -> Any:
+    """NamedSharding pytree matching ``params`` (or any state pytree whose
+    array paths embed the param names, e.g. TrainState(m/v mirror params)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    specs = [NamedSharding(mesh, spec_for_leaf(_path_str(p), leaf.shape,
+                                               mesh))
+             for p, leaf in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def batch_shardings(batch: Any, mesh) -> Any:
+    """Shard the leading (global-batch) dim over (pod, data)."""
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ax = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        n = int(np.prod([mesh.devices.shape[mesh.axis_names.index(a)]
+                         for a in (baxes or ())])) or 1
+        if leaf.shape[0] % n != 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(ax, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_shardings(cache: Any, mesh, *, seq_axis_min: int = 1024) -> Any:
+    """Decode-cache shardings: batch dim over data(+pod), long sequence dims
+    over model (KV-head counts generally don't divide 16; the 32k/500k
+    sequence always does)."""
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bax = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    n_b = int(np.prod([mesh.devices.shape[mesh.axis_names.index(a)]
+                       for a in (baxes or ())])) or 1
+    n_m = mesh.devices.shape[mesh.axis_names.index("model")] \
+        if "model" in mesh.axis_names else 1
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        dims: list = [None] * leaf.ndim
+        # [L, B, ...] layout: try batch on dim 1, longest dim over model
+        if leaf.ndim >= 2 and leaf.shape[1] % n_b == 0 and leaf.shape[1] > 1:
+            dims[1] = bax
+        cand = [i for i in range(2, leaf.ndim)
+                if leaf.shape[i] >= seq_axis_min
+                and leaf.shape[i] % n_m == 0]
+        if cand:
+            dims[max(cand, key=lambda i: leaf.shape[i])] = "model"
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(spec, cache)

@@ -1,0 +1,1 @@
+"""Assigned-architecture substrate: pure-JAX transformer / SSM / MoE zoo."""

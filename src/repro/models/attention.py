@@ -1,0 +1,194 @@
+"""Attention flavours: GQA (+bias/softcap/sliding-window), MLA, cross-attn.
+
+Full-sequence attention is computed **blockwise** (flash-style online
+softmax over KV chunks) so 32k-token prefill never materializes an [S, S]
+score matrix; decode attends densely over the cache (an [B, H, S] row is
+cheap). Sliding-window layers restrict the KV chunk range per Q chunk, so
+window FLOPs are actually skipped, not just masked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import softcap
+from repro.models.rope import apply_rope
+
+NEG_INF = -2.0 ** 30
+
+
+def _online_chunk(q, k, v, mask, cap):
+    """One flash chunk: q [B,Hq,Tq,D], k/v [B,Hkv,Tk,D], mask [Tq,Tk]|None.
+
+    Returns (scores_max [B,Hq,Tq], exp_sum, acc [B,Hq,Tq,Dv]) partials.
+    """
+    G = q.shape[1] // k.shape[1]
+    B, Hkv, Tk, D = k.shape
+    qg = q.reshape(B, Hkv, G, q.shape[2], D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(D).astype(jnp.float32)
+    s = softcap(s, cap)
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return m, l, acc
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool, window: int = 0, cap: float = 0.0,
+                        q_chunk: int = 1024, kv_chunk: int = 1024
+                        ) -> jnp.ndarray:
+    """q [B,Hq,S,D], k/v [B,Hkv,S,Dk/Dv] → [B,Hq,S,Dv]. GQA via head groups.
+
+    ``window`` > 0 ⇒ token i attends to (i-window, i]; KV chunks wholly
+    outside the window are not computed at all.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    if causal:
+        assert Sq == Sk, "causal attention requires equal q/k lengths"
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    n_q = (Sq + q_chunk - 1) // q_chunk
+    n_k = (Sk + kv_chunk - 1) // kv_chunk
+    out = []
+    for qi in range(n_q):
+        q0 = qi * q_chunk
+        qs = q[:, :, q0:q0 + q_chunk]
+        Tq = qs.shape[2]
+        # static KV range for this q chunk
+        k_hi = n_k if not causal else (q0 + Tq + kv_chunk - 1) // kv_chunk
+        k_lo = 0
+        if window > 0:
+            k_lo = max(0, (q0 - window) // kv_chunk)
+        m_run = jnp.full((B, Hkv, G, Tq), NEG_INF, jnp.float32)
+        l_run = jnp.zeros((B, Hkv, G, Tq), jnp.float32)
+        a_run = jnp.zeros((B, Hkv, G, Tq, Dv), jnp.float32)
+        for ki in range(k_lo, k_hi):
+            k0 = ki * kv_chunk
+            ks = k[:, :, k0:k0 + kv_chunk]
+            vs = v[:, :, k0:k0 + kv_chunk]
+            Tk = ks.shape[2]
+            qpos = q0 + jnp.arange(Tq)
+            kpos = k0 + jnp.arange(Tk)
+            mask = jnp.ones((Tq, Tk), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window > 0:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            m, l, acc = _online_chunk(qs, ks, vs, mask, cap)
+            m_new = jnp.maximum(m_run, m)
+            sc_old = jnp.exp(m_run - m_new)
+            sc_new = jnp.exp(m - m_new)
+            l_run = l_run * sc_old + l * sc_new
+            a_run = a_run * sc_old[..., None] + acc * sc_new[..., None]
+            m_run = m_new
+        o = a_run / jnp.maximum(l_run[..., None], 1e-30)
+        out.append(o.reshape(B, Hq, Tq, Dv))
+    return jnp.concatenate(out, axis=2).astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, length, *,
+                     cap: float = 0.0) -> jnp.ndarray:
+    """Single-token decode: q [B,Hq,1,D], caches [B,Hkv,S,D*].
+
+    ``length`` masks the not-yet-written tail of the cache.
+    """
+    B, Hq, _, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / jnp.sqrt(D)
+    s = softcap(s, cap)
+    valid = jnp.arange(S)[None, :] < length[:, None]          # [B, S]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# projection helpers (params are dicts of stacked arrays; see transformer.py)
+# ---------------------------------------------------------------------------
+
+def gqa_qkv(cfg: ModelConfig, p: dict, x: jnp.ndarray, positions
+            ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x [B,S,d] → q [B,H,S,Dh], k/v [B,Hkv,S,Dh] with RoPE applied."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    k = jnp.einsum("bsd,dk->bsk", x, p["wk"])
+    v = jnp.einsum("bsd,dk->bsk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3))
+
+
+class MLAProj(NamedTuple):
+    q_nope: jnp.ndarray   # [B, H, S, d_nope]
+    q_rope: jnp.ndarray   # [B, H, S, d_rope]
+    c_kv: jnp.ndarray     # [B, S, kv_lora]    ← the compressed cache
+    k_rope: jnp.ndarray   # [B, S, d_rope]     ← shared across heads
+
+
+def mla_project(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                positions) -> MLAProj:
+    """DeepSeek-V2 multi-head latent attention projections."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    if cfg.q_lora:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+        q = jnp.einsum("bsr,rq->bsq", cq, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    q = q.reshape(B, S, H, cfg.mla_d_nope + cfg.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.mla_d_nope], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckr = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv, k_rope = jnp.split(ckr, [cfg.kv_lora], axis=-1)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]
+    return MLAProj(q_nope.transpose(0, 2, 1, 3),
+                   q_rope.transpose(0, 2, 1, 3), c_kv, k_rope)
+
+
+def mla_attention(cfg: ModelConfig, p: dict, proj: MLAProj, *,
+                  causal: bool = True, q_chunk: int = 1024,
+                  kv_chunk: int = 1024) -> jnp.ndarray:
+    """Materialize per-head K/V from the latent and run blockwise attention.
+
+    (The decode path instead keeps K/V in latent form — see serving/decode.)
+    Returns [B, S, H·d_v].
+    """
+    B, H, S, _ = proj.q_nope.shape
+    wk = p["wkv_b"][:, :H * cfg.mla_d_nope]
+    wv = p["wkv_b"][:, H * cfg.mla_d_nope:]
+    k_nope = jnp.einsum("bsr,rk->bsk", proj.c_kv, wk).reshape(
+        B, S, H, cfg.mla_d_nope).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsr,rk->bsk", proj.c_kv, wv).reshape(
+        B, S, H, cfg.mla_d_v).transpose(0, 2, 1, 3)
+    k_rope = jnp.broadcast_to(proj.k_rope[:, None],
+                              (B, H, S, cfg.rope_head_dim))
+    q = jnp.concatenate([proj.q_nope, proj.q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    o = blockwise_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk)
+    return o.transpose(0, 2, 1, 3).reshape(B, S, H * cfg.mla_d_v)

@@ -1,0 +1,32 @@
+"""Rotary position embeddings (interleaved-pair convention).
+
+M-RoPE note (qwen2-vl): the multimodal axes of M-RoPE partition the rotary
+channels between temporal/height/width position ids for *vision tokens*. The
+vision frontend is a stub in this framework (``input_specs`` provides patch
+embeddings), so the backbone applies the temporal component — which is
+exactly standard RoPE for text tokens. See DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: [..., S, H, D], positions: [..., S] → same shape."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                      # [D/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]
+    cos = jnp.cos(ang)[..., :, None, :]               # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)

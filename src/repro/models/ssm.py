@@ -1,0 +1,191 @@
+"""State-space blocks: RWKV-6 (Finch) and a Mamba head (for Hymba).
+
+RWKV-6 is attention-free: time-mix (the WKV linear-attention scan with
+data-dependent per-channel decay — Pallas kernel ``repro.kernels.wkv6``) +
+channel-mix. The data-dependent token-shift interpolation uses the low-rank
+(LoRA) parameterization of the paper.
+
+The Mamba head is the selective-SSM recurrence (Δ, B, C data-dependent,
+diagonal A) with a depthwise causal conv front; Hymba runs it in parallel
+with sliding-window attention heads and mean-combines the normalized
+outputs (per the Hymba paper).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+
+class RWKVState(NamedTuple):
+    tm_shift: jnp.ndarray   # [B, d] last token (time-mix shift)
+    cm_shift: jnp.ndarray   # [B, d] last token (channel-mix shift)
+    wkv: jnp.ndarray        # [B, H, dk, dv] linear-attention state
+
+
+def rwkv_zero_state(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                    ) -> RWKVState:
+    H = cfg.n_heads
+    dk = cfg.d_model // H
+    return RWKVState(
+        tm_shift=jnp.zeros((batch, cfg.d_model), dtype),
+        cm_shift=jnp.zeros((batch, cfg.d_model), dtype),
+        wkv=jnp.zeros((batch, H, dk, dk), jnp.float32),
+    )
+
+
+def _ddlerp(x, xx, mu, lora_a, lora_b):
+    """Data-dependent interpolation (RWKV-6 token shift).
+
+    x/xx: [B,S,d]; mu: [d]; lora_a: [d,r]; lora_b: [r,d].
+    """
+    base = x + (xx - x) * mu
+    dyn = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, lora_a))
+    mix = mu + jnp.einsum("bsr,rd->bsd", dyn, lora_b)
+    return x + (xx - x) * mix
+
+
+def rwkv_time_mix(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                  shift_in: jnp.ndarray, wkv_in: jnp.ndarray,
+                  use_kernel: bool = True):
+    """x [B,S,d] → (out [B,S,d], last_token [B,d], wkv_out).
+
+    For training (S>1) the incoming wkv state is zero (sequence start); for
+    decode (S=1) states thread through.
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dk = d // H
+    xx = jnp.concatenate([shift_in[:, None, :], x[:, :-1]], axis=1)
+    r_in = _ddlerp(x, xx, p["mu_r"], p["la_r"], p["lb_r"])
+    k_in = _ddlerp(x, xx, p["mu_k"], p["la_k"], p["lb_k"])
+    v_in = _ddlerp(x, xx, p["mu_v"], p["la_v"], p["lb_v"])
+    w_in = _ddlerp(x, xx, p["mu_w"], p["la_w"], p["lb_w"])
+    g_in = _ddlerp(x, xx, p["mu_g"], p["la_g"], p["lb_g"])
+
+    r = jnp.einsum("bsd,de->bse", r_in, p["wr"])
+    k = jnp.einsum("bsd,de->bse", k_in, p["wk"])
+    v = jnp.einsum("bsd,de->bse", v_in, p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", g_in, p["wg"]))
+    # per-channel decay in (0,1): w = exp(-exp(wl))
+    wl = p["w_base"] + jnp.einsum(
+        "bsr,rd->bsd", jnp.tanh(jnp.einsum("bsd,dr->bsr", w_in, p["la_wd"])),
+        p["lb_wd"])
+    w = jnp.exp(-jnp.exp(wl.astype(jnp.float32)))
+
+    def heads(a):
+        return a.reshape(B, S, H, dk).transpose(0, 2, 1, 3).reshape(
+            B * H, S, dk)
+
+    u = jnp.broadcast_to(p["u"][None], (B, H, dk)).reshape(B * H, dk)
+    if S == 1:
+        # decode: one recurrence step against the carried state
+        rt = heads(r).astype(jnp.float32)[:, 0]
+        kt = heads(k).astype(jnp.float32)[:, 0]
+        vt = heads(v).astype(jnp.float32)[:, 0]
+        wt = heads(w)[:, 0]
+        Sst = wkv_in.reshape(B * H, dk, dk)
+        kv = kt[:, :, None] * vt[:, None, :]
+        y = jnp.einsum("nd,nde->ne", rt, Sst + u[:, :, None] * kv)
+        S_new = wt[:, :, None] * Sst + kv
+        wkv_out = S_new.reshape(B, H, dk, dk)
+        o = y.reshape(B, H, 1, dk)
+    else:
+        from repro.kernels import ops as kops
+        y = kops.wkv6(heads(r).astype(jnp.float32),
+                      heads(k).astype(jnp.float32),
+                      heads(v).astype(jnp.float32),
+                      heads(w), u) if use_kernel else None
+        if y is None:
+            from repro.kernels import ref as kref
+            y = kref.wkv6(heads(r), heads(k), heads(v), heads(w), u)
+        o = y.reshape(B, H, S, dk)
+        wkv_out = wkv_in  # training path does not thread state across calls
+    o = o.transpose(0, 2, 1, 3)                        # [B,S,H,dk]
+    # per-head group norm, then output gate + projection
+    o = rmsnorm(o, p["ln_x"].reshape(H, dk), cfg.norm_eps)
+    o = o.reshape(B, S, d).astype(x.dtype) * g
+    out = jnp.einsum("bse,ed->bsd", o, p["wo"])
+    return out, x[:, -1, :], wkv_out
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                     shift_in: jnp.ndarray):
+    B, S, d = x.shape
+    xx = jnp.concatenate([shift_in[:, None, :], x[:, :-1]], axis=1)
+    xk = x + (xx - x) * p["mu_ck"]
+    xr = x + (xx - x) * p["mu_cr"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["wck"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wcv"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wcr"])) * kv
+    return out, x[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba head (Hymba's parallel SSM)
+# ---------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray   # [B, K-1, di] conv tail
+    h: jnp.ndarray      # [B, di, N] SSM state
+
+
+def mamba_zero_state(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                     ) -> MambaState:
+    di = cfg.d_model * cfg.ssm_expand
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        h=jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    )
+
+
+def mamba_head(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+               state: MambaState) -> tuple[jnp.ndarray, MambaState]:
+    """Selective SSM: x [B,S,d] → (y [B,S,di→d], new state)."""
+    B, S, d = x.shape
+    di = d * cfg.ssm_expand
+    N = cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])       # [B,S,2di]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    # depthwise causal conv (kernel K) with carried tail
+    K = cfg.ssm_conv
+    ext = jnp.concatenate([state.conv.astype(xs.dtype), xs], axis=1)
+    conv = sum(ext[:, i:i + S] * p["conv_w"][i][None, None, :]
+               for i in range(K)) + p["conv_b"]
+    xs = jax.nn.silu(conv)
+    new_tail = ext[:, -(K - 1):] if K > 1 else state.conv
+
+    dt = jax.nn.softplus(jnp.einsum("bse,er->bsr", xs, p["w_dt_a"])
+                         @ p["w_dt_b"] + p["dt_bias"])   # [B,S,di]
+    Bm = jnp.einsum("bse,en->bsn", xs, p["w_B"])         # [B,S,N]
+    Cm = jnp.einsum("bse,en->bsn", xs, p["w_C"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))         # [di,N]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                            # [B,di],[B,di],[B,N]
+        dA = jnp.exp(dtt[:, :, None] * A[None])          # [B,di,N]
+        h = h * dA + (dtt * xt)[:, :, None] * Bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, Ct)
+        return h, y
+
+    h0 = state.h
+    xs32 = xs.astype(jnp.float32)
+    h_new, ys = jax.lax.scan(
+        step, h0,
+        (xs32.transpose(1, 0, 2), dt.astype(jnp.float32).transpose(1, 0, 2),
+         Bm.astype(jnp.float32).transpose(1, 0, 2),
+         Cm.astype(jnp.float32).transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2).astype(x.dtype)            # [B,S,di]
+    y = y + xs * p["D"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, MambaState(conv=new_tail, h=h_new)

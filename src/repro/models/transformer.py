@@ -1,0 +1,441 @@
+"""Model zoo core: init / train-forward / decode for all ten architectures.
+
+Pure JAX (no flax): params are nested dicts of arrays; decoder blocks are
+stacked ``[L, ...]`` and driven by ``jax.lax.scan`` (one traced layer body →
+small HLO even for 126-layer models) with a remat policy around the body.
+
+Families:
+  dense   — llama3 / qwen2 / gemma2 / h2o-danube (GQA, softcap, SWA, bias)
+  moe     — deepseek-moe / deepseek-v2 (shared+routed experts; v2 adds MLA)
+  ssm     — rwkv6 (attention-free; Pallas WKV kernel)
+  hybrid  — hymba (parallel SWA-attention + Mamba heads)
+  encdec  — whisper (stub audio frontend; cross-attention decoder)
+
+Gemma2's local/global alternation is handled by scanning over layer *pairs*
+so chunk scheduling in blockwise attention stays static.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moelib
+from repro.models import ssm as ssmlib
+from repro.models.config import ModelConfig
+from repro.models.layers import (act_fn, dense_init, rmsnorm,
+                                 shard_batch, softcap)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _attn_params(cfg: ModelConfig, key, dtype) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Params = {}
+    if cfg.use_mla:
+        if cfg.q_lora:
+            p["wq_a"] = dense_init(ks[0], (d, cfg.q_lora), dtype=dtype)
+            p["wq_b"] = dense_init(ks[1], (cfg.q_lora, cfg.q_dim),
+                                   dtype=dtype)
+        else:
+            p["wq"] = dense_init(ks[0], (d, cfg.q_dim), dtype=dtype)
+        p["wkv_a"] = dense_init(
+            ks[2], (d, cfg.kv_lora + cfg.rope_head_dim), dtype=dtype)
+        p["wkv_b"] = dense_init(
+            ks[3], (cfg.kv_lora,
+                    cfg.n_heads * (cfg.mla_d_nope + cfg.mla_d_v)),
+            dtype=dtype)
+        p["wo"] = dense_init(ks[4], (cfg.n_heads * cfg.mla_d_v, d),
+                             dtype=dtype)
+    else:
+        p["wq"] = dense_init(ks[0], (d, cfg.q_dim), dtype=dtype)
+        p["wk"] = dense_init(ks[1], (d, cfg.kv_dim), dtype=dtype)
+        p["wv"] = dense_init(ks[2], (d, cfg.kv_dim), dtype=dtype)
+        p["wo"] = dense_init(ks[3], (cfg.q_dim, d), dtype=dtype)
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+            p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+            p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    return p
+
+
+def _mlp_params(cfg: ModelConfig, key, dtype, d_ff=None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = {"wi": dense_init(ks[0], (d, d_ff), dtype=dtype),
+         "wo2": dense_init(ks[2], (d_ff, d), dtype=dtype)}
+    if cfg.act == "silu":  # gated (llama-style); whisper uses plain gelu
+        p["wg"] = dense_init(ks[1], (d, d_ff), dtype=dtype)
+    return p
+
+
+def _moe_params(cfg: ModelConfig, key, dtype) -> Params:
+    ks = jax.random.split(key, 7)
+    d, E, de = cfg.d_model, cfg.n_experts, cfg.d_expert
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype=jnp.float32),
+        "wi": dense_init(ks[1], (E, d, de), dtype=dtype),
+        "wg": dense_init(ks[2], (E, d, de), dtype=dtype),
+        "wo": dense_init(ks[3], (E, de, d), dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        dsh = cfg.n_shared_experts * de
+        p["sh_wi"] = dense_init(ks[4], (d, dsh), dtype=dtype)
+        p["sh_wg"] = dense_init(ks[5], (d, dsh), dtype=dtype)
+        p["sh_wo"] = dense_init(ks[6], (dsh, d), dtype=dtype)
+    return p
+
+
+def _rwkv_params(cfg: ModelConfig, key, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dk = d // H
+    r = 32  # token-shift LoRA rank
+    ks = iter(jax.random.split(key, 32))
+    p: Params = {}
+    for nm in ("r", "k", "v", "w", "g"):
+        p[f"mu_{nm}"] = jnp.full((d,), 0.5, dtype)
+        p[f"la_{nm}"] = dense_init(next(ks), (d, r), dtype=dtype)
+        p[f"lb_{nm}"] = dense_init(next(ks), (r, d), dtype=dtype)
+    for nm in ("wr", "wk", "wv", "wg", "wo"):
+        p[nm] = dense_init(next(ks), (d, d), dtype=dtype)
+    p["w_base"] = jnp.full((d,), -2.0, dtype)          # decay ≈ exp(-e^-2)
+    p["la_wd"] = dense_init(next(ks), (d, 64), dtype=dtype)
+    p["lb_wd"] = dense_init(next(ks), (64, d), dtype=dtype)
+    p["u"] = dense_init(next(ks), (H, dk), dtype=jnp.float32)
+    p["ln_x"] = jnp.zeros((d,), dtype)
+    p["mu_ck"] = jnp.full((d,), 0.5, dtype)
+    p["mu_cr"] = jnp.full((d,), 0.5, dtype)
+    p["wck"] = dense_init(next(ks), (d, cfg.d_ff), dtype=dtype)
+    p["wcv"] = dense_init(next(ks), (cfg.d_ff, d), dtype=dtype)
+    p["wcr"] = dense_init(next(ks), (d, d), dtype=dtype)
+    return p
+
+
+def _mamba_params(cfg: ModelConfig, key, dtype) -> Params:
+    d = cfg.d_model
+    di = d * cfg.ssm_expand
+    N = cfg.ssm_state
+    ks = iter(jax.random.split(key, 9))
+    return {
+        "w_in": dense_init(next(ks), (d, 2 * di), dtype=dtype),
+        "conv_w": dense_init(next(ks), (cfg.ssm_conv, di), dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_dt_a": dense_init(next(ks), (di, 64), dtype=dtype),
+        "w_dt_b": dense_init(next(ks), (64, di), dtype=dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),       # softplus ≈ 0.01
+        "w_B": dense_init(next(ks), (di, N), dtype=dtype),
+        "w_C": dense_init(next(ks), (di, N), dtype=dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))),
+        "D": jnp.ones((di,), dtype),
+        "w_out": dense_init(next(ks), (di, d), dtype=dtype),
+        "norm_attn": jnp.zeros((d,), dtype),
+        "norm_ssm": jnp.zeros((d,), dtype),
+        "beta_attn": jnp.ones((), jnp.float32),
+        "beta_ssm": jnp.ones((), jnp.float32),
+    }
+
+
+def _block_params(cfg: ModelConfig, key, dtype, moe_layer: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Params = {"norm1": jnp.zeros((d,), dtype),
+                 "norm2": jnp.zeros((d,), dtype)}
+    if cfg.family == "ssm":
+        p.update(_rwkv_params(cfg, ks[0], dtype))
+        return p
+    p["attn"] = _attn_params(cfg, ks[0], dtype)
+    if cfg.name.startswith("gemma2"):
+        p["norm_post1"] = jnp.zeros((d,), dtype)
+        p["norm_post2"] = jnp.zeros((d,), dtype)
+    if moe_layer:
+        p["moe"] = _moe_params(cfg, ks[1], dtype)
+    else:
+        p["mlp"] = _mlp_params(cfg, ks[1], dtype)
+    if cfg.family == "hybrid":
+        p["ssm"] = _mamba_params(cfg, ks[2], dtype)
+    return p
+
+
+def _stack(params_list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *params_list)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16,
+                stacked: bool = True) -> Params:
+    """Initialize the full parameter pytree.
+
+    ``stacked=True`` initializes ONE layer and broadcasts it L times (cheap;
+    used for smoke/dry-run). Training from scratch wants per-layer keys
+    (``stacked=False`` is not needed — pass unique data instead).
+    """
+    keys = jax.random.split(key, 8)
+    d, Vp = cfg.d_model, cfg.vocab_padded
+    params: Params = {
+        "embed": dense_init(keys[0], (Vp, d), scale=0.02, dtype=dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (d, Vp), dtype=dtype)
+
+    n_moe = cfg.n_layers - cfg.n_dense_layers if cfg.family == "moe" else 0
+    one = _block_params(cfg, keys[2], dtype,
+                        moe_layer=(cfg.family == "moe"))
+    L_scan = (n_moe if cfg.family == "moe" else cfg.n_layers)
+    if cfg.layer_pattern == "alt_local_global":
+        assert cfg.n_layers % 2 == 0
+        pair = {"local": one,
+                "global": _block_params(cfg, keys[3], dtype, False)}
+        params["layers"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers // 2,)
+                                       + x.shape), pair)
+    else:
+        params["layers"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (L_scan,) + x.shape), one)
+    if cfg.family == "moe" and cfg.n_dense_layers:
+        dense_one = _block_params(cfg, keys[4], dtype, moe_layer=False)
+        params["dense_layers"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_dense_layers,)
+                                       + x.shape), dense_one)
+    if cfg.family == "encdec":
+        enc_one = {"norm1": jnp.zeros((d,), dtype),
+                   "norm2": jnp.zeros((d,), dtype),
+                   "attn": _attn_params(cfg, keys[5], dtype),
+                   "mlp": _mlp_params(cfg, keys[6], dtype)}
+        params["enc_layers"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_enc_layers,)
+                                       + x.shape), enc_one)
+        params["enc_norm"] = jnp.zeros((d,), dtype)
+        params["enc_pos"] = dense_init(keys[7], (cfg.enc_seq, d),
+                                       scale=0.02, dtype=dtype)
+        # decoder blocks additionally carry cross-attention
+        cross = {"norm_x": jnp.zeros((d,), dtype),
+                 "xattn": _attn_params(cfg, keys[3], dtype)}
+        params["layers"] = {
+            **params["layers"],
+            **jax.tree.map(lambda x: jnp.broadcast_to(
+                x[None], (cfg.n_layers,) + x.shape), cross)}
+        # learned decoder positions sized for the largest decode cell
+        params["dec_pos"] = dense_init(keys[2], (32768, d), scale=0.02,
+                                       dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# train-time forward
+# ---------------------------------------------------------------------------
+
+def _mlp(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    a = act_fn(cfg.act)
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if "wg" in p:
+        h = a(jnp.einsum("bsd,df->bsf", x, p["wg"])) * h
+    else:
+        h = a(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo2"])
+
+
+def _attn_block(cfg: ModelConfig, p: Params, x: jnp.ndarray, positions,
+                *, causal: bool, window: int) -> jnp.ndarray:
+    B, S, d = x.shape
+    if cfg.use_mla:
+        proj = attn.mla_project(cfg, p, x, positions)
+        o = attn.mla_attention(cfg, p, proj, causal=causal)
+    else:
+        q, k, v = attn.gqa_qkv(cfg, p, x, positions)
+        o = attn.blockwise_attention(q, k, v, causal=causal, window=window,
+                                     cap=cfg.attn_softcap)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.q_dim)
+    return jnp.einsum("bsq,qd->bsd", o, p["wo"])
+
+
+def _dense_block(cfg: ModelConfig, p: Params, x: jnp.ndarray, positions, *,
+                 window: int, use_moe: bool = False) -> jnp.ndarray:
+    x = shard_batch(x)
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    a = _attn_block(cfg, p["attn"], h, positions, causal=True, window=window)
+    if cfg.family == "hybrid":
+        m, _ = ssmlib.mamba_head(
+            cfg, p["ssm"], h, ssmlib.mamba_zero_state(cfg, x.shape[0]))
+        a = ((p["ssm"]["beta_attn"] *
+              rmsnorm(a, p["ssm"]["norm_attn"], cfg.norm_eps)
+              + p["ssm"]["beta_ssm"] *
+              rmsnorm(m, p["ssm"]["norm_ssm"], cfg.norm_eps)) * 0.5
+             ).astype(x.dtype)
+    if "norm_post1" in p:
+        a = rmsnorm(a, p["norm_post1"], cfg.norm_eps)
+    x = x + a
+    h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    if use_moe:
+        f, _ = moelib.moe_ffn(cfg, p["moe"], h)
+    else:
+        f = _mlp(cfg, p["mlp"], h)
+    if "norm_post2" in p:
+        f = rmsnorm(f, p["norm_post2"], cfg.norm_eps)
+    return x + f
+
+
+def _rwkv_block(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    x = shard_batch(x)
+    B = x.shape[0]
+    zeros = jnp.zeros((B, cfg.d_model), x.dtype)
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    tm, _, _ = ssmlib.rwkv_time_mix(
+        cfg, p, h, zeros, jnp.zeros((B, cfg.n_heads,
+                                     cfg.d_model // cfg.n_heads,
+                                     cfg.d_model // cfg.n_heads)))
+    x = x + tm
+    h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    cm, _ = ssmlib.rwkv_channel_mix(cfg, p, h, zeros)
+    return x + cm
+
+
+def scan_layers(body, x, xs_tree, unroll: bool):
+    """lax.scan over stacked layer params, or a Python unroll.
+
+    The unrolled form exists for the dry-run's cost accounting (XLA's
+    cost_analysis counts a scan body once regardless of trip count).
+    """
+    if not unroll:
+        return jax.lax.scan(body, x, xs_tree)
+    L = jax.tree.leaves(xs_tree)[0].shape[0]
+    ys = []
+    for layer in range(L):
+        sl = jax.tree.map(lambda a: a[layer], xs_tree)
+        x, y = body(x, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *z: jnp.stack(z), *ys)
+    else:
+        ys = None
+    return x, ys
+
+
+def _remat(f, policy: Optional[str]):
+    if policy == "none" or policy is None:
+        return f
+    pol = dict(
+        full=None,
+        dots=jax.checkpoint_policies.checkpoint_dots,
+        dots_no_batch=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    )[policy]
+    return jax.checkpoint(f, policy=pol)
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            *, remat_policy: Optional[str] = "dots") -> jnp.ndarray:
+    """Training/prefill forward → logits [B, S, vocab_padded].
+
+    ``batch``: {"tokens": [B,S]} or {"embeds": [B,S,d]} (modality stubs),
+    plus {"frames": [B,enc_seq,d]} for the enc-dec family.
+    """
+    if "embeds" in batch:
+        x = batch["embeds"].astype(params["embed"].dtype)
+        B, S, _ = x.shape
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+    x = shard_batch(x)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    enc_out = None
+    if cfg.family == "encdec":
+        f = batch["frames"].astype(x.dtype)
+        e = f + params["enc_pos"][None, :f.shape[1]]
+
+        def enc_body(h, lp):
+            hn = rmsnorm(h, lp["norm1"], cfg.norm_eps)
+            # bidirectional attention; positions=0 ⇒ RoPE is the identity
+            # (whisper uses the learned enc_pos embedding instead)
+            q, k, v = attn.gqa_qkv(cfg, lp["attn"], hn, positions=jnp.zeros(
+                (B, f.shape[1]), jnp.int32))
+            o = attn.blockwise_attention(q, k, v, causal=False, window=0)
+            o = o.transpose(0, 2, 1, 3).reshape(B, f.shape[1], cfg.q_dim)
+            h = h + jnp.einsum("bsq,qd->bsd", o, lp["attn"]["wo"])
+            hn = rmsnorm(h, lp["norm2"], cfg.norm_eps)
+            return h + _mlp(cfg, lp["mlp"], hn), None
+
+        e, _ = scan_layers(_remat(enc_body, remat_policy), e,
+                           params["enc_layers"], cfg.unroll_layers)
+        enc_out = rmsnorm(e, params["enc_norm"], cfg.norm_eps)
+        x = x + params["dec_pos"][None, :S]
+
+    window = cfg.window if cfg.layer_pattern == "swa" else 0
+
+    if cfg.family == "ssm":
+        def body(h, lp):
+            return _rwkv_block(cfg, lp, h), None
+        x, _ = scan_layers(_remat(body, remat_policy), x, params["layers"],
+                           cfg.unroll_layers)
+    elif cfg.layer_pattern == "alt_local_global":
+        def body(h, lp):
+            h = _dense_block(cfg, lp["local"], h, positions,
+                             window=cfg.window)
+            h = _dense_block(cfg, lp["global"], h, positions, window=0)
+            return h, None
+        x, _ = scan_layers(_remat(body, remat_policy), x, params["layers"],
+                           cfg.unroll_layers)
+    elif cfg.family == "encdec":
+        def body(h, lp):
+            # self-attention → cross-attention → MLP (whisper block order;
+            # the decode path in serving/decode.py mirrors this exactly)
+            hn = rmsnorm(h, lp["norm1"], cfg.norm_eps)
+            h = h + _attn_block(cfg, lp["attn"], hn, positions, causal=True,
+                                window=0)
+            hn = rmsnorm(h, lp["norm_x"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dq->bsq", hn, lp["xattn"]["wq"]).reshape(
+                B, S, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+            k = jnp.einsum("bsd,dk->bsk", enc_out, lp["xattn"]["wk"]).reshape(
+                B, -1, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+            v = jnp.einsum("bsd,dk->bsk", enc_out, lp["xattn"]["wv"]).reshape(
+                B, -1, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+            o = attn.blockwise_attention(q, k, v, causal=False, window=0)
+            o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.q_dim)
+            h = h + jnp.einsum("bsq,qd->bsd", o, lp["xattn"]["wo"])
+            hn = rmsnorm(h, lp["norm2"], cfg.norm_eps)
+            return h + _mlp(cfg, lp["mlp"], hn), None
+        x, _ = scan_layers(_remat(body, remat_policy), x, params["layers"],
+                           cfg.unroll_layers)
+    else:
+        use_moe = cfg.family == "moe"
+        if use_moe and "dense_layers" in params:
+            def dbody(h, lp):
+                return _dense_block(cfg, lp, h, positions, window=window,
+                                    use_moe=False), None
+            x, _ = scan_layers(_remat(dbody, remat_policy), x,
+                               params["dense_layers"], cfg.unroll_layers)
+
+        def body(h, lp):
+            return _dense_block(cfg, lp, h, positions, window=window,
+                                use_moe=use_moe), None
+        x, _ = scan_layers(_remat(body, remat_policy), x, params["layers"],
+                           cfg.unroll_layers)
+
+    x = shard_batch(rmsnorm(x, params["final_norm"], cfg.norm_eps))
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = shard_batch(jnp.einsum("bsd,dv->bsv", x, head))
+    return softcap(logits, cfg.logit_softcap)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            *, remat_policy: Optional[str] = "dots") -> jnp.ndarray:
+    """Next-token cross entropy over the logical vocab."""
+    logits = forward(cfg, params, batch, remat_policy=remat_policy)
+    labels = batch["labels"]
+    logits = logits[..., :cfg.vocab].astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,1 @@
+"""Serving substrate: KV caches and single-token decode steps."""

@@ -1,0 +1,292 @@
+"""Single-token decode steps (``serve_step``) for every family.
+
+One new token against a cache of ``seq_len`` — the shape the ``decode_32k``
+and ``long_500k`` cells lower. Layers run under ``lax.scan`` with the layer
+cache as scanned xs/ys, so the decode HLO is one block body regardless of
+depth.
+
+MLA decode uses weight absorption: scores and values are computed directly
+against the 512-dim latent cache (q_nope is folded through W_uk, the output
+through W_uv), so per-token cache traffic is kv_lora + d_rope bytes — the
+DeepSeek-V2 memory win, reproduced structurally.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssmlib
+from repro.models.attention import decode_attention
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm, softcap, act_fn
+from repro.models.transformer import scan_layers
+from repro.models.rope import apply_rope
+from repro.serving.kvcache import Cache
+
+Params = Dict[str, Any]
+
+
+def _proj_heads(x, w, b, n, d):
+    y = jnp.einsum("bd,de->be", x, w)
+    if b is not None:
+        y = y + b
+    return y.reshape(x.shape[0], n, d)
+
+
+def _gqa_decode(cfg: ModelConfig, p: Params, h: jnp.ndarray, kc, vc, pos,
+                window: int):
+    """h [B, d] → (attn_out [B, d], new_k, new_v). Ring write if windowed."""
+    B = h.shape[0]
+    posv = jnp.broadcast_to(pos, (B,))
+    q = _proj_heads(h, p["wq"], p.get("bq"), cfg.n_heads, cfg.d_head)
+    k = _proj_heads(h, p["wk"], p.get("bk"), cfg.n_kv_heads, cfg.d_head)
+    v = _proj_heads(h, p["wv"], p.get("bv"), cfg.n_kv_heads, cfg.d_head)
+    q = apply_rope(q[:, None], posv[:, None], cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], posv[:, None], cfg.rope_theta)[:, 0]
+    S = kc.shape[2]
+    slot = (pos % S) if window else jnp.minimum(pos, S - 1)
+    kc = kc.at[:, :, slot].set(k.astype(kc.dtype))
+    vc = vc.at[:, :, slot].set(v.astype(vc.dtype))
+    length = jnp.minimum(pos + 1, S)
+    o = decode_attention(q[:, :, None, :].reshape(B, cfg.n_heads, 1,
+                                                  cfg.d_head),
+                         kc, vc, jnp.broadcast_to(length, (B,)),
+                         cap=cfg.attn_softcap)
+    o = o.reshape(B, cfg.q_dim)
+    return jnp.einsum("bq,qd->bd", o, p["wo"]), kc, vc
+
+
+def _mla_decode(cfg: ModelConfig, p: Params, h: jnp.ndarray, ckv, krope,
+                pos):
+    B = h.shape[0]
+    H = cfg.n_heads
+    posv = jnp.broadcast_to(pos, (B,))
+    if cfg.q_lora:
+        q = jnp.einsum("br,rq->bq", jnp.einsum("bd,dr->br", h, p["wq_a"]),
+                       p["wq_b"])
+    else:
+        q = jnp.einsum("bd,dq->bq", h, p["wq"])
+    q = q.reshape(B, H, cfg.mla_d_nope + cfg.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.mla_d_nope], axis=-1)
+    q_rope = apply_rope(q_rope[:, None], posv[:, None],
+                        cfg.rope_theta)[:, 0]
+    ckr = jnp.einsum("bd,dr->br", h, p["wkv_a"])
+    c_new, kr_new = jnp.split(ckr, [cfg.kv_lora], axis=-1)
+    kr_new = apply_rope(kr_new[:, None, None, :], posv[:, None],
+                        cfg.rope_theta)[:, 0, 0]
+    ckv = ckv.at[:, pos].set(c_new.astype(ckv.dtype))
+    krope = krope.at[:, pos].set(kr_new.astype(krope.dtype))
+    # absorbed attention in latent space
+    wk = p["wkv_b"][:, :H * cfg.mla_d_nope].reshape(
+        cfg.kv_lora, H, cfg.mla_d_nope)
+    wv = p["wkv_b"][:, H * cfg.mla_d_nope:].reshape(
+        cfg.kv_lora, H, cfg.mla_d_v)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))            # [B, H, kv_lora]
+    s = jnp.einsum("bhr,bsr->bhs", q_lat, ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bhe,bse->bhs", q_rope.astype(jnp.float32),
+                       krope.astype(jnp.float32))
+    s = s / jnp.sqrt(cfg.mla_d_nope + cfg.rope_head_dim)
+    S = ckv.shape[1]
+    valid = jnp.arange(S)[None, None, :] <= pos
+    s = jnp.where(valid, s, -2.0 ** 30)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", w, ckv.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, wv.astype(jnp.float32))
+    o = o.reshape(B, H * cfg.mla_d_v).astype(h.dtype)
+    return jnp.einsum("bq,qd->bd", o, p["wo"]), ckv, krope
+
+
+def _mlp1(cfg, p, x):
+    a = act_fn(cfg.act)
+    hdn = jnp.einsum("bd,df->bf", x, p["wi"])
+    if "wg" in p:
+        hdn = a(jnp.einsum("bd,df->bf", x, p["wg"])) * hdn
+    else:
+        hdn = a(hdn)
+    return jnp.einsum("bf,fd->bd", hdn, p["wo2"])
+
+
+def _moe1(cfg, p, x):
+    """Decode-time MoE: per-token top-k gather (tiny batch — gather is fine)."""
+    from repro.models.moe import route_topk
+    scores = jax.nn.softmax(
+        jnp.einsum("bd,de->be", x.astype(jnp.float32),
+                   p["router"].astype(jnp.float32)), -1)
+    ids, gates = route_topk(scores, cfg.top_k)            # [B, k]
+    wi = p["wi"][ids]                                     # [B, k, d, de]
+    wg = p["wg"][ids]
+    wo = p["wo"][ids]
+    a = act_fn(cfg.act)
+    h = a(jnp.einsum("bd,bkdf->bkf", x, wg)) * \
+        jnp.einsum("bd,bkdf->bkf", x, wi)
+    y = jnp.einsum("bkf,bkfd->bkd", h, wo)
+    out = jnp.einsum("bkd,bk->bd", y, gates.astype(x.dtype))
+    if cfg.n_shared_experts:
+        hs = a(jnp.einsum("bd,df->bf", x, p["sh_wg"])) * \
+            jnp.einsum("bd,df->bf", x, p["sh_wi"])
+        out = out + jnp.einsum("bf,fd->bd", hs, p["sh_wo"])
+    return out
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
+                tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Cache]:
+    """tokens [B, 1] → (logits [B, vocab_padded], new cache)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = params["embed"][tokens[:, 0]]
+    if cfg.family == "encdec":
+        x = x + params["dec_pos"][pos]
+    window = cfg.window if cfg.layer_pattern == "swa" else 0
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            lp, tms, cms, wkv = xs
+            hn = rmsnorm(h[:, None], lp["norm1"], cfg.norm_eps)
+            tm, tm_new, wkv_new = ssmlib.rwkv_time_mix(
+                cfg, lp, hn, tms, wkv)
+            h = h + tm[:, 0]
+            hn = rmsnorm(h[:, None], lp["norm2"], cfg.norm_eps)
+            cm, cm_new = ssmlib.rwkv_channel_mix(cfg, lp, hn, cms)
+            return h + cm[:, 0], (tm_new.astype(tms.dtype),
+                                  cm_new.astype(cms.dtype), wkv_new)
+        x, (tm_s, cm_s, wkv_s) = scan_layers(
+            body, x, (params["layers"], cache["tm_shift"],
+                      cache["cm_shift"], cache["wkv"]), cfg.unroll_layers)
+        new_cache = dict(cache, pos=pos + 1, tm_shift=tm_s, cm_shift=cm_s,
+                         wkv=wkv_s)
+    elif cfg.use_mla:
+        def body(h, xs):
+            lp, ckv, krope = xs
+            hn = rmsnorm(h, lp["norm1"], cfg.norm_eps)
+            a, ckv, krope = _mla_decode(cfg, lp["attn"], hn, ckv, krope, pos)
+            h = h + a
+            hn = rmsnorm(h, lp["norm2"], cfg.norm_eps)
+            f = _moe1(cfg, lp["moe"], hn) if "moe" in lp \
+                else _mlp1(cfg, lp["mlp"], hn)
+            return h + f, (ckv, krope)
+        if "dense_layers" in params:
+            xd, (dckv, dkrope) = scan_layers(
+                body, x, (params["dense_layers"],
+                          cache["ckv"][:cfg.n_dense_layers],
+                          cache["krope"][:cfg.n_dense_layers]),
+                cfg.unroll_layers)
+            x, (mckv, mkrope) = scan_layers(
+                body, xd, (params["layers"],
+                           cache["ckv"][cfg.n_dense_layers:],
+                           cache["krope"][cfg.n_dense_layers:]),
+                cfg.unroll_layers)
+            ckv = jnp.concatenate([dckv, mckv])
+            krope = jnp.concatenate([dkrope, mkrope])
+        else:
+            x, (ckv, krope) = scan_layers(
+                body, x, (params["layers"], cache["ckv"], cache["krope"]),
+                cfg.unroll_layers)
+        new_cache = dict(cache, pos=pos + 1, ckv=ckv, krope=krope)
+    elif cfg.layer_pattern == "alt_local_global":
+        def body(h, xs):
+            lp, lk, lv, gk, gv = xs
+            hn = rmsnorm(h, lp["local"]["norm1"], cfg.norm_eps)
+            a, lk, lv = _gqa_decode(cfg, lp["local"]["attn"], hn, lk, lv,
+                                    pos, cfg.window)
+            if "norm_post1" in lp["local"]:
+                a = rmsnorm(a, lp["local"]["norm_post1"], cfg.norm_eps)
+            h = h + a
+            hn = rmsnorm(h, lp["local"]["norm2"], cfg.norm_eps)
+            f = _mlp1(cfg, lp["local"]["mlp"], hn)
+            if "norm_post2" in lp["local"]:
+                f = rmsnorm(f, lp["local"]["norm_post2"], cfg.norm_eps)
+            h = h + f
+            hn = rmsnorm(h, lp["global"]["norm1"], cfg.norm_eps)
+            a, gk, gv = _gqa_decode(cfg, lp["global"]["attn"], hn, gk, gv,
+                                    pos, 0)
+            if "norm_post1" in lp["global"]:
+                a = rmsnorm(a, lp["global"]["norm_post1"], cfg.norm_eps)
+            h = h + a
+            hn = rmsnorm(h, lp["global"]["norm2"], cfg.norm_eps)
+            f = _mlp1(cfg, lp["global"]["mlp"], hn)
+            if "norm_post2" in lp["global"]:
+                f = rmsnorm(f, lp["global"]["norm_post2"], cfg.norm_eps)
+            return h + f, (lk, lv, gk, gv)
+        x, (lk, lv, gk, gv) = scan_layers(
+            body, x, (params["layers"], cache["local"]["k"],
+                      cache["local"]["v"], cache["global"]["k"],
+                      cache["global"]["v"]), cfg.unroll_layers)
+        new_cache = dict(cache, pos=pos + 1,
+                         local={"k": lk, "v": lv},
+                         **{"global": {"k": gk, "v": gv}})
+    else:
+        def body(h, xs):
+            lp = xs[0]
+            kc, vc = xs[1], xs[2]
+            hn = rmsnorm(h, lp["norm1"], cfg.norm_eps)
+            a, kc, vc = _gqa_decode(cfg, lp["attn"], hn, kc, vc, pos, window)
+            extra = ()
+            if cfg.family == "hybrid":
+                conv, ssm_h = xs[3], xs[4]
+                st = ssmlib.MambaState(conv=conv, h=ssm_h)
+                m, st = ssmlib.mamba_head(cfg, lp["ssm"], hn[:, None], st)
+                a = ((lp["ssm"]["beta_attn"] *
+                      rmsnorm(a, lp["ssm"]["norm_attn"], cfg.norm_eps)
+                      + lp["ssm"]["beta_ssm"] *
+                      rmsnorm(m[:, 0], lp["ssm"]["norm_ssm"],
+                              cfg.norm_eps)) * 0.5).astype(h.dtype)
+                extra = (st.conv, st.h)
+            if cfg.family == "encdec":
+                xk, xv = xs[3], xs[4]
+                h2 = h + a
+                hn2 = rmsnorm(h2, lp["norm_x"], cfg.norm_eps)
+                q = _proj_heads(hn2, lp["xattn"]["wq"], None, cfg.n_heads,
+                                cfg.d_head)
+                o = decode_attention(
+                    q[:, :, None, :], xk, xv,
+                    jnp.full((B,), xk.shape[2], jnp.int32))
+                o = o.reshape(B, cfg.q_dim)
+                a = a + jnp.einsum("bq,qd->bd", o, lp["xattn"]["wo"])
+                extra = (xk, xv)
+            h = h + a
+            hn = rmsnorm(h, lp["norm2"], cfg.norm_eps)
+            f = _moe1(cfg, lp["moe"], hn) if "moe" in lp \
+                else _mlp1(cfg, lp["mlp"], hn)
+            return h + f, (kc, vc) + extra
+        xs_in = [params["layers"], cache["k"], cache["v"]]
+        if cfg.family == "hybrid":
+            xs_in += [cache["conv"], cache["ssm_h"]]
+        if cfg.family == "encdec":
+            xs_in += [cache["xk"], cache["xv"]]
+        if cfg.family == "moe" and "dense" in cache:
+            def dbody(h, xs):
+                lp, kc, vc = xs
+                hn = rmsnorm(h, lp["norm1"], cfg.norm_eps)
+                a, kc, vc = _gqa_decode(cfg, lp["attn"], hn, kc, vc, pos,
+                                        window)
+                h = h + a
+                hn = rmsnorm(h, lp["norm2"], cfg.norm_eps)
+                return h + _mlp1(cfg, lp["mlp"], hn), (kc, vc)
+            x, (dk_, dv_) = scan_layers(
+                dbody, x, (params["dense_layers"], cache["dense"]["k"],
+                           cache["dense"]["v"]), cfg.unroll_layers)
+        x, ys = scan_layers(body, x, tuple(xs_in), cfg.unroll_layers)
+        new_cache = dict(cache, pos=pos + 1, k=ys[0], v=ys[1])
+        if cfg.family == "hybrid":
+            new_cache.update(conv=ys[2], ssm_h=ys[3])
+        if cfg.family == "encdec":
+            new_cache.update(xk=ys[2], xv=ys[3])
+        if cfg.family == "moe" and "dense" in cache:
+            new_cache["dense"] = {"k": dk_, "v": dv_}
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = softcap(jnp.einsum("bd,dv->bv", x, head), cfg.logit_softcap)
+    return logits, new_cache
+
+
+def prefill_via_decode(cfg: ModelConfig, params: Params, cache: Cache,
+                       tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Cache]:
+    """Sequentially decode a prompt (test/example helper, small scale only)."""
+    logits = None
+    for t in range(tokens.shape[1]):
+        logits, cache = decode_step(cfg, params, cache, tokens[:, t:t + 1])
+    return logits, cache

@@ -1,0 +1,80 @@
+"""Decode-time caches for every architecture family.
+
+Layouts (leading L = layers, stacked for lax.scan):
+
+  dense / moe   k,v: [L, B, Hkv, S_cache, Dh]   (S_cache = seq_len, or the
+                window size for SWA layers — sub-quadratic archs keep an
+                O(window) cache, which is what makes ``long_500k`` feasible)
+  gemma2        two stacks: local (window) + global (full) caches
+  MLA           ckv: [L, B, S, kv_lora], krope: [L, B, S, d_rope]
+                — the compressed latent is all that is stored (the paper's
+                memory win), expanded per-head only at score time
+  rwkv6         tm/cm shifts [L, B, d] + wkv state [L, B, H, dk, dk] — O(1)
+  hymba         window k/v + mamba conv tail/state — O(window + d·N)
+  whisper       decoder self k/v + precomputed encoder cross k/v
+
+``pos`` is a scalar step counter shared across the batch (standard batched
+decode); ring-buffer writes use ``pos % window`` for windowed layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Cache = Dict[str, Any]
+
+
+def _kv(L, B, Hkv, S, Dh, dtype):
+    return {"k": jnp.zeros((L, B, Hkv, S, Dh), dtype),
+            "v": jnp.zeros((L, B, Hkv, S, Dh), dtype)}
+
+
+def make_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> Cache:
+    """Allocate the decode cache for a maximum context of ``seq_len``."""
+    L, B = cfg.n_layers, batch
+    H, Dh = cfg.n_kv_heads, cfg.d_head
+    cache: Cache = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        dk = cfg.d_model // cfg.n_heads
+        cache.update(
+            tm_shift=jnp.zeros((L, B, cfg.d_model), dtype),
+            cm_shift=jnp.zeros((L, B, cfg.d_model), dtype),
+            wkv=jnp.zeros((L, B, cfg.n_heads, dk, dk), jnp.float32))
+        return cache
+    if cfg.use_mla:
+        cache.update(
+            ckv=jnp.zeros((L, B, seq_len, cfg.kv_lora), dtype),
+            krope=jnp.zeros((L, B, seq_len, cfg.rope_head_dim), dtype))
+        return cache
+    if cfg.layer_pattern == "alt_local_global":
+        half = L // 2
+        Sl = min(cfg.window, seq_len)
+        cache["local"] = _kv(half, B, H, Sl, Dh, dtype)
+        cache["global"] = _kv(half, B, H, seq_len, Dh, dtype)
+        return cache
+    S_eff = min(cfg.window, seq_len) if cfg.layer_pattern == "swa" \
+        else seq_len
+    L_main = L - (cfg.n_dense_layers if cfg.family == "moe" else 0)
+    cache.update(_kv(L_main, B, H, S_eff, Dh, dtype))
+    if cfg.family == "hybrid":
+        di = cfg.d_model * cfg.ssm_expand
+        cache.update(
+            conv=jnp.zeros((L, B, cfg.ssm_conv - 1, di), dtype),
+            ssm_h=jnp.zeros((L, B, di, cfg.ssm_state), jnp.float32))
+    if cfg.family == "encdec":
+        cache.update(
+            xk=jnp.zeros((L, B, H, cfg.enc_seq, Dh), dtype),
+            xv=jnp.zeros((L, B, H, cfg.enc_seq, Dh), dtype))
+    if cfg.family == "moe" and cfg.n_dense_layers:
+        cache["dense"] = _kv(cfg.n_dense_layers, B, H, seq_len, Dh, dtype)
+    return cache
+
+
+def cache_bytes(cache: Cache) -> int:
+    import jax
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)
+               if hasattr(x, "size"))

@@ -1,0 +1,50 @@
+"""int8 gradient compression with stochastic rounding (cross-pod option).
+
+At 2+ pods the gradient all-reduce crosses the slower inter-pod links; a
+per-tensor-scaled int8 encode cuts those bytes 4× (bf16→int8 ≙ 2×; fp32→4×).
+Stochastic rounding keeps the quantizer unbiased so SGD/Adam convergence is
+preserved in expectation. Used by wrapping the psum:
+
+    g8, scale = encode(g, key)
+    g8 = jax.lax.psum(g8.astype(jnp.int32), 'pod')   # int32 accumulate
+    g  = decode(g8, jax.lax.psum(scale, 'pod') / npods)
+
+The encode/decode pair is exactly inverse in expectation — property-tested
+in tests/test_training.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def encode(g: jnp.ndarray, key: jnp.ndarray) -> Tuple[jnp.ndarray,
+                                                      jnp.ndarray]:
+    """g → (int8 codes, scale). Stochastic rounding; scale = absmax/127."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(g32)) / 127.0 + 1e-30
+    x = g32 / scale
+    lo = jnp.floor(x)
+    p_up = x - lo
+    up = jax.random.uniform(key, g.shape) < p_up
+    q = lo + up.astype(jnp.float32)
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def decode(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def encode_tree(grads: Any, key: jnp.ndarray) -> Tuple[Any, Any]:
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    enc = [encode(g, k) for g, k in zip(leaves, keys)]
+    qs = jax.tree.unflatten(treedef, [e[0] for e in enc])
+    scales = jax.tree.unflatten(treedef, [e[1] for e in enc])
+    return qs, scales
+
+
+def decode_tree(qs: Any, scales: Any) -> Any:
+    return jax.tree.map(decode, qs, scales)

@@ -1,0 +1,79 @@
+"""Train-step factory: loss → grads (with microbatch accumulation) → AdamW.
+
+The returned ``train_step(state, batch) → (state, metrics)`` is what the
+dry-run lowers on the production mesh. Gradient accumulation runs as a
+``lax.scan`` over microbatches (constant HLO size), which is the activation
+-memory lever for the 405B cell; compute/comm overlap falls out of XLA's
+latency-hiding scheduler given the scan structure (grad psum of microbatch i
+overlaps with compute of microbatch i+1 under GSPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.training import optimizer as opt
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt.OptState
+
+
+def init_train_state(cfg: ModelConfig, key, *, dtype=jnp.bfloat16,
+                     opt_cfg: Optional[opt.AdamWConfig] = None) -> TrainState:
+    params = tf.init_params(cfg, key, dtype=dtype)
+    ocfg = opt_cfg or opt.AdamWConfig()
+    return TrainState(params=params, opt=opt.init_opt_state(ocfg, params))
+
+
+def make_train_step(cfg: ModelConfig, *, opt_cfg: Optional[opt.AdamWConfig]
+                    = None, accum_steps: int = 1,
+                    remat_policy: str = "dots") -> Callable:
+    """Build ``train_step(state, batch)``.
+
+    ``batch`` leaves are [global_batch, ...]; with ``accum_steps`` > 1 the
+    leading dim is reshaped to [accum, micro, ...] and scanned — gradients
+    are averaged across microbatches before one optimizer update.
+    """
+    ocfg = opt_cfg or opt.AdamWConfig()
+
+    def loss_of(params, batch):
+        return tf.loss_fn(cfg, params, batch, remat_policy=remat_policy)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_of)(state.params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_of)(state.params, mb)
+                return (acc[0] + l, jax.tree.map(jnp.add, acc[1], g)), None
+
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params))
+            (loss_sum, gsum), _ = jax.lax.scan(body, zero, micro)
+            loss = loss_sum / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+        params, ostate, metrics = opt.apply_updates(
+            ocfg, state.params, grads, state.opt)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params=params, opt=ostate), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, remat_policy: Optional[str] = None
+                   ) -> Callable:
+    def eval_step(params, batch):
+        return tf.loss_fn(cfg, params, batch, remat_policy=remat_policy)
+    return eval_step

@@ -1,0 +1,167 @@
+"""AI-tree / AI+R hybrid behaviour tests: exactness, routing, grid, fallback."""
+import dataclasses
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.data import synth
+from repro.core.rtree import RTree
+from repro.core import device_tree as dt, labels, build, grid as gridlib
+from repro.core.aitree import ai_query, make_aitree
+from repro.core.hybrid import hybrid_query
+from repro.core import geometry as geo
+from repro.core.classifiers import knn as knnlib
+from repro.core import celldata
+
+
+@pytest.fixture(scope="module")
+def world():
+    pts = synth.tweets_like(20_000, seed=3)
+    tree = RTree(max_entries=32).insert_all(pts)
+    dtree = dt.flatten(tree)
+    qs = synth.synth_queries(pts, 2e-4, 600, seed=4)
+    wl = labels.make_workload(dtree, qs)
+    hyb, rep = build.fit_airtree(dtree, wl, kind="knn", grid_sizes=(6,))
+    return pts, dtree, wl, hyb, rep
+
+
+def test_knn_reaches_perfect_training_fit(world):
+    *_, rep = world
+    assert rep.exact_fit == 1.0
+
+
+def test_ai_path_is_exact_on_training_workload(world):
+    pts, dtree, wl, hyb, _ = world
+    B = 128
+    q = jnp.asarray(wl.queries[:B])
+    res = hybrid_query(hyb, q, force_path="ai", max_results=1024)
+    for i in range(B):
+        exp = np.flatnonzero(geo.np_contains_point(
+            wl.queries[i], pts.astype(np.float32)))
+        got = sorted(x for x in np.asarray(res.result_ids[i]).tolist()
+                     if x >= 0)
+        assert got == sorted(exp.tolist()), i
+
+
+def test_hybrid_is_exact_on_unseen_queries(world):
+    """Unseen queries: kNN misses → fallback → still exact (paper §III-C)."""
+    pts, dtree, wl, hyb, _ = world
+    unseen = synth.synth_queries(pts, 2e-4, 64, seed=99)
+    res = hybrid_query(hyb, jnp.asarray(unseen), force_path="ai",
+                       max_results=1024)
+    for i in range(64):
+        exp = np.flatnonzero(geo.np_contains_point(
+            unseen[i], pts.astype(np.float32)))
+        got = sorted(x for x in np.asarray(res.result_ids[i]).tolist()
+                     if x >= 0)
+        assert got == sorted(exp.tolist()), i
+
+
+def test_ai_path_reduces_leaf_accesses_for_high_overlap(world):
+    _, dtree, wl, hyb, _ = world
+    high = wl.alpha <= 0.5
+    if high.sum() < 10:
+        pytest.skip("workload has too few high-overlap queries")
+    q = jnp.asarray(wl.queries[high][:64])
+    res = hybrid_query(hyb, q, force_path="ai")
+    r = hybrid_query(hyb, q, force_path="r")
+    assert np.asarray(res.leaf_accesses).mean() < \
+        np.asarray(r.leaf_accesses).mean()
+
+
+def test_hybrid_router_dispatch(world):
+    _, dtree, wl, hyb, _ = world
+    q = jnp.asarray(wl.queries[:128])
+    res = hybrid_query(hyb, q)
+    high = np.asarray(res.routed_high)
+    used = np.asarray(res.used_ai)
+    assert (~used | high).all()         # AI only used when routed high
+    # auto cost never exceeds forced-R cost by more than prediction overhead
+    r = hybrid_query(hyb, q, force_path="r")
+    assert np.asarray(res.n_results).tolist() == \
+        np.asarray(r.n_results).tolist()
+
+
+def test_empty_prediction_triggers_fallback(world):
+    """A bank that never predicts anything must always fall back."""
+    pts, dtree, wl, hyb, _ = world
+    bank = hyb.ait.bank
+    broken = dataclasses.replace(
+        bank, labels=jnp.zeros_like(bank.labels))
+    ait = make_aitree(hyb.ait.grid, broken, max_cells=4,
+                      max_pred=hyb.ait.max_pred)
+    res = ai_query(ait, dtree, jnp.asarray(wl.queries[:32]))
+    assert np.asarray(res.fallback).all()
+
+
+def test_misprediction_triggers_fallback(world):
+    """A bank predicting a wrong (empty-yield) leaf must fall back."""
+    pts, dtree, wl, hyb, _ = world
+    bank = hyb.ait.bank
+    # every stored query predicts an extraneous far-away leaf as well
+    lab = np.asarray(bank.labels).copy()
+    lab[..., 0] = 1.0  # first local label slot always on
+    broken = dataclasses.replace(bank, labels=jnp.asarray(lab))
+    ait = make_aitree(hyb.ait.grid, broken, max_cells=4,
+                      max_pred=hyb.ait.max_pred)
+    res = ai_query(ait, dtree, jnp.asarray(wl.queries[:64]))
+    fb = np.asarray(res.fallback)
+    # some prediction now includes a leaf with zero qualifying entries
+    assert fb.any()
+
+
+def test_grid_cells_match_bruteforce(world):
+    pts, *_ = world
+    g = gridlib.fit_grid(pts, 7)
+    rng = np.random.default_rng(5)
+    lo = rng.uniform(pts.min(0), pts.max(0), size=(100, 2))
+    w = rng.uniform(0, (pts.max(0) - pts.min(0)) * 0.2, size=(100, 2))
+    qs = np.concatenate([lo, lo + w], axis=1).astype(np.float32)
+    ids, valid, overflow = gridlib.bucket_queries_by_cell(g, qs, 16)
+    bbox = np.asarray(g.bbox)
+    cw = (bbox[2] - bbox[0]) / g.g
+    ch = (bbox[3] - bbox[1]) / g.g
+    for i in range(100):
+        exp = set()
+        for cx in range(g.g):
+            for cy in range(g.g):
+                cell = np.array([bbox[0] + cx * cw, bbox[1] + cy * ch,
+                                 bbox[0] + (cx + 1) * cw,
+                                 bbox[1] + (cy + 1) * ch])
+                # half-open cell ownership matches floor-based routing
+                q = qs[i]
+                if (q[0] < cell[2] and q[2] >= cell[0]
+                        and q[1] < cell[3] and q[3] >= cell[1]):
+                    exp.add(cy * g.g + cx)
+        got = set(ids[i][valid[i]].tolist())
+        if overflow[i]:
+            continue  # overflowing queries take the exact path anyway
+        assert got == exp, (i, sorted(got), sorted(exp))
+
+
+def test_router_accuracy_reasonable(world):
+    *_, hyb, rep = world if len(world) == 5 else (None,) * 5
+    # router trained on a mixed-α workload should beat the base rate
+    r = rep.router
+    assert r.test_acc >= max(0.6, min(r.base_rate, 1 - r.base_rate))
+
+
+def test_workload_alpha_buckets(world):
+    _, _, wl, _, _ = world
+    b = wl.bucket()
+    centers = np.array([0.1, 0.25, 0.5, 0.75, 1.0])
+    assert np.abs(b[:, None] - centers[None, :]).min(axis=1).max() < 1e-6
+    hi = wl.high_overlap(0.75)
+    assert ((wl.alpha <= 0.75) == hi).all()
+
+
+def test_celldata_label_maps_are_consistent(world):
+    _, dtree, wl, hyb, _ = world
+    g = hyb.ait.grid
+    ds = celldata.build_cell_datasets(g, wl, max_cells_per_query=4)
+    # every mapped global label must be a real leaf id
+    lm = ds.label_map[ds.lmask]
+    assert (lm >= 0).all() and (lm < dtree.n_leaves).all()
+    # label multi-hots only light up valid label slots
+    assert not ds.labels[~np.broadcast_to(
+        ds.lmask[:, None, :], ds.labels.shape)].any()

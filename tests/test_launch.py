@@ -1,0 +1,116 @@
+"""Launch-layer tests: sharding rules, input specs, shape policies."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import sharding as shd
+from repro.launch.specs import (ACCUM, SHAPE_DEFS, cell_supported,
+                                decode_specs, input_specs)
+
+
+FAKE_MESH = SimpleNamespace(axis_names=("data", "model"),
+                            devices=np.zeros((16, 16)))
+
+
+def spec(path, shape):
+    return shd.spec_for_leaf(path, shape, FAKE_MESH)
+
+
+def test_attention_rules():
+    assert spec("params/layers/attn/wq", (80, 8192, 8192)) == \
+        P(None, "data", "model")
+    assert spec("opt/m/layers/attn/wo", (80, 8192, 8192)) == \
+        P(None, "model", "data")
+    assert spec("params/layers/attn/bq", (80, 8192)) == P(None, "model")
+
+
+def test_embed_rules_match_under_prefixes():
+    assert spec("params/embed", (152064, 8192)) == P("model", "data")
+    assert spec("opt/v/embed", (152064, 8192)) == P("model", "data")
+    assert spec("params/lm_head", (8192, 152064)) == P("data", "model")
+
+
+def test_moe_expert_parallel_rules():
+    assert spec("params/layers/moe/wi", (27, 64, 2048, 1408)) == \
+        P(None, "model", "data", None)
+    assert spec("params/layers/moe/wo", (27, 64, 1408, 2048)) == \
+        P(None, "model", None, "data")
+
+
+def test_divisibility_fallback_replicates():
+    # 25 heads × 64 = 1600 divides 16; but a hypothetical odd dim must not
+    assert spec("params/layers/attn/wq", (32, 1600, 1600)) == \
+        P(None, "data", "model")
+    assert spec("params/layers/attn/wq", (32, 1602, 1602)) == P(None, None,
+                                                                None)
+
+
+def test_norms_replicated():
+    assert spec("params/layers/norm1", (80, 8192)) == P()
+    assert spec("params/final_norm", (8192,)) == P()
+
+
+def test_every_arch_majority_bytes_sharded():
+    """For every arch, ≥95% of parameter bytes must shard over the mesh."""
+    from repro.models import transformer as tf
+    for arch in configs.ARCHS:
+        cfg = configs.get_config(arch)
+        params = jax.eval_shape(
+            lambda c=cfg: tf.init_params(c, jax.random.PRNGKey(0),
+                                         dtype=jnp.bfloat16))
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        total = repl = 0
+        for path, leaf in flat:
+            p = shd.spec_for_leaf(shd._path_str(path), leaf.shape, FAKE_MESH)
+            nbytes = leaf.size * leaf.dtype.itemsize
+            total += nbytes
+            if all(ax is None for ax in (tuple(p) or (None,))):
+                repl += nbytes
+        assert repl / total < 0.05, (arch, repl / total)
+
+
+def test_long_500k_policy():
+    allowed = {"rwkv6-3b", "hymba-1.5b", "h2o-danube-3-4b"}
+    for arch in configs.ARCHS:
+        cfg = configs.get_config(arch)
+        ok, why = cell_supported(cfg, "long_500k")
+        assert ok == (cfg.name in allowed), (arch, why)
+
+
+def test_input_specs_shapes():
+    cfg = configs.get_config("qwen2-72b")
+    s = input_specs(cfg, "train_4k")
+    assert s["tokens"].shape == (256, 4096)
+    assert s["labels"].shape == (256, 4096)
+    s = input_specs(cfg, "prefill_32k")
+    assert s["tokens"].shape == (32, 32768) and "labels" not in s
+    # vision stub: embeds instead of tokens
+    v = input_specs(configs.get_config("qwen2-vl-72b"), "train_4k")
+    assert v["embeds"].shape == (256, 4096, 8192)
+    # audio stub: frames present
+    w = input_specs(configs.get_config("whisper-small"), "train_4k")
+    assert w["frames"].shape == (256, 1500, 768)
+
+
+def test_decode_specs_cache_scales():
+    cfg = configs.get_config("deepseek-v2-236b")
+    tok, cache = decode_specs(cfg, "decode_32k")
+    assert tok["tokens"].shape == (128, 1)
+    # MLA latent cache: [L, B, S, kv_lora]
+    assert cache["ckv"].shape == (60, 128, 32768, 512)
+    # rwkv long context: O(1) state, no [S] dim anywhere
+    cfg2 = configs.get_config("rwkv6-3b")
+    _, cache2 = decode_specs(cfg2, "long_500k")
+    assert all(524288 not in leaf.shape
+               for leaf in jax.tree.leaves(cache2)
+               if hasattr(leaf, "shape"))
+
+
+def test_accum_divides_batch():
+    for arch, accum in ACCUM.items():
+        assert SHAPE_DEFS["train_4k"]["global_batch"] % accum == 0

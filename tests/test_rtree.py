@@ -1,0 +1,141 @@
+"""R-tree substrate tests: invariants, host/device equivalence, α."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rtree import RTree
+from repro.core import device_tree as dt, traversal
+from repro.core import geometry as geo
+
+
+def brute_force(points, rect):
+    m = geo.np_contains_point(rect, points)
+    return np.flatnonzero(m)
+
+
+def mk_queries(rng, n, scale=1.0):
+    lo = rng.uniform(-scale, scale, size=(n, 2))
+    w = rng.uniform(0, 0.5 * scale, size=(n, 2))
+    return np.concatenate([lo, lo + w], axis=1).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def small_tree():
+    rng = np.random.default_rng(7)
+    pts = rng.normal(size=(5000, 2))
+    tree = RTree(max_entries=16).insert_all(pts)
+    return tree, dt.flatten(tree), pts
+
+
+def test_invariants_dynamic(small_tree):
+    tree, _, _ = small_tree
+    tree.check_invariants()
+
+
+def test_invariants_str():
+    rng = np.random.default_rng(8)
+    pts = rng.normal(size=(3000, 2))
+    tree = RTree.str_bulk(pts, max_entries=16)
+    # STR trees respect max fill and MBR tightness (min fill can differ in
+    # the last group of a slice, so check MBRs + coverage only).
+    dtree = dt.flatten(tree)
+    q = mk_queries(rng, 50, 2.0)
+    res = traversal.range_query(dtree, jnp.asarray(q), max_visited=512,
+                                max_results=4096)
+    for i in range(50):
+        exp = brute_force(pts, q[i].astype(np.float64))
+        got = sorted(x for x in np.asarray(res.result_ids[i]).tolist()
+                     if x >= 0)
+        assert got == sorted(exp.tolist())
+
+
+def test_query_matches_brute_force(small_tree):
+    tree, dtree, pts = small_tree
+    rng = np.random.default_rng(9)
+    q = mk_queries(rng, 100, 2.0)
+    res = traversal.range_query(dtree, jnp.asarray(q), max_visited=512,
+                                max_results=4096)
+    for i in range(100):
+        exp = brute_force(pts, q[i].astype(np.float64))
+        got = sorted(x for x in np.asarray(res.result_ids[i]).tolist()
+                     if x >= 0)
+        assert got == sorted(exp.tolist()), i
+
+
+def test_device_visited_equals_host(small_tree):
+    tree, dtree, _ = small_tree
+    rng = np.random.default_rng(10)
+    q = mk_queries(rng, 40, 2.0)
+    res = traversal.range_query(dtree, jnp.asarray(q), max_visited=512,
+                                max_results=4096)
+    leaf_map = dt.dfs_leaf_index(tree)
+    for i in range(40):
+        vh, th, _ = tree.query(q[i].astype(np.float64))
+        assert sorted(leaf_map[n] for n in vh) == sorted(
+            np.flatnonzero(np.asarray(res.visited[i])).tolist())
+        assert sorted(leaf_map[n] for n in th) == sorted(
+            np.flatnonzero(np.asarray(res.true_leaves[i])).tolist())
+
+
+def test_alpha_range_and_definition(small_tree):
+    _, dtree, _ = small_tree
+    rng = np.random.default_rng(11)
+    q = mk_queries(rng, 64, 2.0)
+    res = traversal.range_query(dtree, jnp.asarray(q), max_visited=512,
+                                max_results=4096)
+    a = np.asarray(traversal.alpha(res.n_true, res.n_visited))
+    assert ((a >= 0) & (a <= 1)).all()
+    nv = np.asarray(res.n_visited)
+    nt = np.asarray(res.n_true)
+    np.testing.assert_allclose(a[nv > 0], (nt / np.maximum(nv, 1))[nv > 0])
+    assert (nt <= nv).all()  # true leaves are a subset of visited
+
+
+def test_dfs_leaf_ids_consecutive_siblings(small_tree):
+    tree, _, _ = small_tree
+    order = tree.leaves_dfs()
+    pos = {n: i for i, n in enumerate(order)}
+    # siblings (same parent) occupy a contiguous ID range
+    for node in range(tree.n_nodes):
+        if not tree.is_leaf[node]:
+            kid_leaves = [c for c in tree.children[node] if tree.is_leaf[c]]
+            if kid_leaves:
+                ids = sorted(pos[c] for c in kid_leaves)
+                assert ids == list(range(ids[0], ids[0] + len(ids)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(50, 400), st.integers(4, 24), st.integers(0, 2**31 - 1))
+def test_property_build_and_query(n, M, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(-1, 1, size=(n, 2))
+    tree = RTree(max_entries=M).insert_all(pts)
+    tree.check_invariants()
+    dtree = dt.flatten(tree)
+    q = mk_queries(rng, 10)
+    res = traversal.range_query(dtree, jnp.asarray(q), max_visited=512,
+                                max_results=1024)
+    for i in range(10):
+        exp = brute_force(pts, q[i].astype(np.float64))
+        got = sorted(x for x in np.asarray(res.result_ids[i]).tolist()
+                     if x >= 0)
+        assert got == sorted(exp.tolist())
+
+
+def test_insert_after_bulk_query_still_exact():
+    rng = np.random.default_rng(13)
+    pts1 = rng.uniform(-1, 1, size=(500, 2))
+    pts2 = rng.uniform(-1, 1, size=(300, 2))
+    tree = RTree(max_entries=8).insert_all(pts1).insert_all(pts2)
+    tree.check_invariants()
+    all_pts = np.concatenate([pts1, pts2])
+    dtree = dt.flatten(tree)
+    q = mk_queries(rng, 20)
+    res = traversal.range_query(dtree, jnp.asarray(q), max_visited=512,
+                                max_results=1024)
+    for i in range(20):
+        exp = brute_force(all_pts, q[i].astype(np.float64))
+        got = sorted(x for x in np.asarray(res.result_ids[i]).tolist()
+                     if x >= 0)
+        assert got == sorted(exp.tolist())

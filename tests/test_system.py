@@ -1,0 +1,105 @@
+"""End-to-end system behaviour tests for the AI+R-tree framework.
+
+Covers the integration paths that unit tests don't: full build→serve flows,
+distributed engine equivalence (subprocess with 8 fake host devices), and a
+single dry-run cell lowering (subprocess so the 512-device XLA flag never
+leaks into this process).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import build, device_tree as dt, labels
+from repro.core.hybrid import hybrid_query
+from repro.core.rtree import RTree
+from repro.data import synth
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+@pytest.fixture(scope="module")
+def system():
+    pts = synth.crimes_like(25_000, seed=11)
+    tree = RTree(max_entries=48).insert_all(pts)
+    dtree = dt.flatten(tree)
+    qs = synth.synth_queries(pts, 1e-4, 1500, seed=12)
+    wl = labels.make_workload(dtree, qs)
+    hyb, rep = build.fit_airtree(dtree, wl, kind="knn", grid_sizes=(6, 10))
+    return pts, dtree, wl, hyb, rep
+
+
+def test_end_to_end_hybrid_beats_classical_cost(system):
+    """Under the paper's cost model, hybrid ≤ classical on a mixed workload."""
+    _, _, wl, hyb, _ = system
+    q = jnp.asarray(wl.queries[:512])
+    hybrid = hybrid_query(hyb, q)
+    classical = hybrid_query(hyb, q, force_path="r")
+    io = 13.0
+    cost_h = io * float(np.asarray(hybrid.leaf_accesses).mean())
+    cost_r = io * float(np.asarray(classical.leaf_accesses).mean())
+    assert cost_h <= cost_r * 1.01
+
+
+def test_alpha_identifies_improvable_queries(system):
+    """Leaf-access savings concentrate on high-overlap (low α) queries."""
+    _, _, wl, hyb, _ = system
+    lo = wl.alpha <= 0.5
+    hi = wl.alpha > 0.9
+    if lo.sum() < 20 or hi.sum() < 20:
+        pytest.skip("degenerate α split")
+    q_lo = jnp.asarray(wl.queries[lo][:128])
+    q_hi = jnp.asarray(wl.queries[hi][:128])
+    save = []
+    for q in (q_lo, q_hi):
+        ai = hybrid_query(hyb, q, force_path="ai")
+        r = hybrid_query(hyb, q, force_path="r")
+        save.append(1 - float(np.asarray(ai.leaf_accesses).mean())
+                    / max(float(np.asarray(r.leaf_accesses).mean()), 1e-9))
+    assert save[0] > save[1]
+
+
+def test_router_discriminates_by_overlap(system):
+    """The router must send low-α (high-overlap) queries to the AI path
+    more often than high-α ones — discrimination, not an absolute rate
+    (the absolute rate tracks the workload's base rate, per the paper)."""
+    _, _, wl, hyb, _ = system
+    hi_alpha = wl.alpha > 0.95          # clearly low-overlap queries
+    lo_alpha = wl.alpha <= 0.5          # clearly high-overlap queries
+    if hi_alpha.sum() < 20 or lo_alpha.sum() < 20:
+        pytest.skip("degenerate α split")
+    r_hi = hybrid_query(hyb, jnp.asarray(wl.queries[hi_alpha][:128]))
+    r_lo = hybrid_query(hyb, jnp.asarray(wl.queries[lo_alpha][:128]))
+    assert np.asarray(r_lo.routed_high).mean() > \
+        np.asarray(r_hi.routed_high).mean()
+
+
+def test_distributed_engine_equivalence_subprocess(system):
+    """shard_map engine == single-device hybrid, on 8 fake host devices."""
+    script = os.path.join(REPO, "tests", "helpers", "engine_equiv.py")
+    out = subprocess.run([sys.executable, script], env=ENV,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "EQUIVALENT" in out.stdout
+
+
+def test_dryrun_single_cell_subprocess():
+    """One small-arch cell lowers+compiles on the 512-device production mesh."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "hymba-1.5b", "--shape", "decode_32k"],
+        env=ENV, capture_output=True, text=True, timeout=560, cwd=REPO)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ok in" in out.stdout, out.stdout
+    rec_path = os.path.join(REPO, "benchmarks", "results", "dryrun",
+                            "hymba-1.5b__decode_32k__16x16.json")
+    with open(rec_path) as f:
+        rec = json.load(f)
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 256
+    assert rec["cost"].get("flops", 0) > 0

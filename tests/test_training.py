@@ -1,0 +1,172 @@
+"""Training substrate tests: optimizer, accumulation, checkpoint round-trip,
+elastic resume, compression unbiasedness, fault-tolerance control plane."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.training import (checkpoint, compression, fault_tolerance,
+                            optimizer as opt, train_loop)
+
+
+def tiny_cfg():
+    import dataclasses
+    return dataclasses.replace(
+        configs.reduced(configs.get_config("h2o_danube3_4b")),
+        n_layers=2, d_ff=64, vocab=128)
+
+
+def make_batch(cfg, B=4, S=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(rng.integers(1, cfg.vocab, (B, S)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(1, cfg.vocab, (B, S)),
+                                  jnp.int32)}
+
+
+def test_loss_decreases_over_steps():
+    cfg = tiny_cfg()
+    ocfg = opt.AdamWConfig(lr=1e-2, warmup_steps=0, decay_steps=1000,
+                           weight_decay=0.0)
+    state = train_loop.init_train_state(cfg, jax.random.PRNGKey(0),
+                                        dtype=jnp.float32, opt_cfg=ocfg)
+    step = jax.jit(train_loop.make_train_step(cfg, opt_cfg=ocfg))
+    batch = make_batch(cfg)  # overfit one batch
+    losses = []
+    for _ in range(30):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses[:3] + losses[-3:]
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = tiny_cfg()
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=0, clip_norm=0.0,
+                           weight_decay=0.0)
+    s0 = train_loop.init_train_state(cfg, jax.random.PRNGKey(1),
+                                     dtype=jnp.float32, opt_cfg=ocfg)
+    batch = make_batch(cfg, B=8)
+    full = jax.jit(train_loop.make_train_step(cfg, opt_cfg=ocfg,
+                                              accum_steps=1))
+    acc = jax.jit(train_loop.make_train_step(cfg, opt_cfg=ocfg,
+                                             accum_steps=4))
+    s_full, m_full = full(s0, batch)
+    s_acc, m_acc = acc(s0, batch)
+    np.testing.assert_allclose(float(m_full["loss"]), float(m_acc["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s_full.params),
+                    jax.tree.leaves(s_acc.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+
+
+def test_bf16_optimizer_state_runs():
+    cfg = tiny_cfg()
+    ocfg = opt.AdamWConfig(lr=1e-3, state_dtype=jnp.bfloat16)
+    state = train_loop.init_train_state(cfg, jax.random.PRNGKey(0),
+                                        dtype=jnp.float32, opt_cfg=ocfg)
+    step = jax.jit(train_loop.make_train_step(cfg, opt_cfg=ocfg))
+    state, m = step(state, make_batch(cfg))
+    assert np.isfinite(float(m["loss"]))
+    assert jax.tree.leaves(state.opt.m)[0].dtype == jnp.bfloat16
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = tiny_cfg()
+    state = train_loop.init_train_state(cfg, jax.random.PRNGKey(2),
+                                        dtype=jnp.float32)
+    d = str(tmp_path / "ckpt")
+    checkpoint.save(d, 7, state, extra={"data_position": 123})
+    template = train_loop.init_train_state(cfg, jax.random.PRNGKey(99),
+                                           dtype=jnp.float32)
+    restored, manifest = checkpoint.restore(d, template)
+    assert manifest["step"] == 7
+    assert manifest["extra"]["data_position"] == 123
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_prune_and_latest(tmp_path):
+    cfg = tiny_cfg()
+    state = train_loop.init_train_state(cfg, jax.random.PRNGKey(2),
+                                        dtype=jnp.float32)
+    d = str(tmp_path / "ckpt")
+    for s in (1, 2, 3, 4, 5):
+        checkpoint.save(d, s, state, keep=2)
+    assert checkpoint.latest_step(d) == 5
+    kept = sorted(f for f in os.listdir(d) if f.endswith(".npz"))
+    assert len(kept) == 2
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    cfg = tiny_cfg()
+    state = train_loop.init_train_state(cfg, jax.random.PRNGKey(2),
+                                        dtype=jnp.float32)
+    d = str(tmp_path / "ckpt")
+    checkpoint.save(d, 1, state)
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, d_ff=96)
+    template = train_loop.init_train_state(cfg2, jax.random.PRNGKey(0),
+                                           dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        checkpoint.restore(d, template)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(1e-6, 1e3))
+def test_compression_unbiased_and_bounded(seed, scale):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(0, scale, (64,)), jnp.float32)
+    q, s = compression.encode(g, jax.random.PRNGKey(seed))
+    deq = compression.decode(q, s)
+    # bounded quantization error: one quantum
+    assert float(jnp.abs(deq - g).max()) <= float(s) * 1.001
+    # unbiased in expectation over rounding draws
+    keys = jax.random.split(jax.random.PRNGKey(seed), 64)
+    deqs = jnp.stack([compression.decode(*compression.encode(g, k))
+                      for k in keys])
+    bias = float(jnp.abs(deqs.mean(0) - g).max())
+    assert bias < float(s) * 0.25
+
+
+def test_straggler_monitor_fake_clock():
+    t = [0.0]
+    mon = fault_tolerance.StragglerMonitor(threshold=1.5,
+                                           clock=lambda: t[0])
+    for step in range(10):
+        t[0] += 1.0
+        for h in ("h0", "h1", "h2", "h3"):
+            mon.beat(h, 1.0 if h != "h3" else 2.5)
+    assert mon.stragglers() == ["h3"]
+    t[0] += 100.0
+    mon.beat("h0", 1.0)
+    assert set(mon.dead(timeout=50)) == {"h1", "h2", "h3"}
+
+
+def test_preemption_flag_checkpoint_flow(tmp_path):
+    cfg = tiny_cfg()
+    state = train_loop.init_train_state(cfg, jax.random.PRNGKey(0),
+                                        dtype=jnp.float32)
+    step = jax.jit(train_loop.make_train_step(cfg))
+    handler = fault_tolerance.PreemptionHandler()
+    d = str(tmp_path / "ckpt")
+    batch = make_batch(cfg)
+    for i in range(5):
+        state, _ = step(state, batch)
+        if i == 2:
+            handler.request()        # simulated SIGTERM
+        if handler.preempted():
+            checkpoint.save(d, i, state,
+                            extra=fault_tolerance.RunState(
+                                step=i, data_position=i * 4).to_dict())
+            break
+    assert checkpoint.latest_step(d) == 2
+    restored, manifest = checkpoint.restore(
+        d, train_loop.init_train_state(cfg, jax.random.PRNGKey(9),
+                                       dtype=jnp.float32))
+    rs = fault_tolerance.RunState.from_dict(manifest["extra"])
+    assert rs.step == 2 and rs.data_position == 8
