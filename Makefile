@@ -1,0 +1,13 @@
+# Local equivalents of the CI gates (.github/workflows/ci.yml).
+PYTHONPATH := src
+
+.PHONY: test smoke bench
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+smoke: test
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --quick --only engine_bench --json BENCH_engine.json
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json BENCH_engine.json

@@ -47,6 +47,87 @@ def serving_throughput(rows: list, n_points: int = 120_000,
                      f"leaf_acc={acc:.2f},tile_bytes={tile}"))
 
 
+def _synth_levels(L: int, fanout: int, rng):
+    """STR-packed synthetic hierarchy (spatially tight leaf-ID tiles)."""
+    from repro.data.synth_tree import synth_levels
+    mbrs, parents = synth_levels(L, fanout, rng, str_pack=True)
+    return ([jnp.asarray(m) for m in mbrs],
+            [jnp.asarray(p) for p in parents])
+
+
+def _med_time(fn, reps: int = 15) -> float:
+    """Median wall time (s) — robust to the noisy shared-CPU container."""
+    jax.block_until_ready(fn())  # warm / compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def traversal_micro(rows: list, B: int = 256, L: int = 2048,
+                    fanout: int = 4) -> None:
+    """Fused single-pass traversal vs per-level kernel path vs jnp oracle.
+
+    Interpret mode on CPU — wall numbers track relative cost only, but the
+    fused/per-level ratio is the perf gate for this subsystem: the fused
+    kernel replaces H pallas_calls + H−1 HBM mask round-trips with one
+    call, and its tile-level early exit skips dead subtrees outright.
+    Three workloads: uniform small queries, a spatially clustered serving
+    batch (most leaf tiles dead), and an all-dead batch (frontier dies at
+    the root).
+    """
+    import functools
+
+    from repro.core.device_tree import DeviceTree, Level
+    from repro.core import traversal
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    mbrs, parents = _synth_levels(L, fanout, rng)
+    tree = DeviceTree(
+        levels=tuple(Level(mbrs=m, parent=p)
+                     for m, p in zip(mbrs, parents)),
+        leaf_entries=jnp.zeros((L, 8, 2), jnp.float32),
+        leaf_entry_ids=jnp.zeros((L, 8), jnp.int32),
+        leaf_counts=jnp.zeros((L,), jnp.int32),
+        n_points=0, max_entries=fanout)
+
+    lo = rng.uniform(-1, 1, (B, 2))
+    w = rng.uniform(0, 0.05, (B, 2))
+    q_uniform = jnp.asarray(np.concatenate([lo, lo + w], 1), jnp.float32)
+    c = rng.uniform(-0.8, 0.6, (1, 2))
+    lo = c + rng.uniform(0, 0.15, (B, 2))
+    w = rng.uniform(0, 0.02, (B, 2))
+    q_cluster = jnp.asarray(np.concatenate([lo, lo + w], 1), jnp.float32)
+    q_dead = jnp.asarray(
+        np.tile(np.array([[50.0, 50.0, 51.0, 51.0]], np.float32), (B, 1)))
+
+    fused = jax.jit(functools.partial(ops.traverse_fused))
+    per_level = jax.jit(functools.partial(
+        traversal.visited_leaf_mask_per_level, use_kernel=True))
+    oracle = jax.jit(functools.partial(
+        traversal.visited_leaf_mask_per_level, use_kernel=False))
+
+    lm = [lv.mbrs for lv in tree.levels]
+    lp = [lv.parent for lv in tree.levels]
+    shape = f"B{B}xL{L}"
+    for wl, q in [("uniform", q_uniform), ("clustered", q_cluster),
+                  ("alldead", q_dead)]:
+        # sanity: identical masks, or the timing comparison is meaningless
+        np.testing.assert_array_equal(np.asarray(fused(q, lm, lp)),
+                                      np.asarray(oracle(tree, q)))
+        t_fused = _med_time(lambda: fused(q, lm, lp))
+        t_level = _med_time(lambda: per_level(tree, q))
+        rows.append((f"traversal_fused_{wl}_{shape}_us", t_fused * 1e6,
+                     f"speedup_vs_per_level={t_level / t_fused:.2f}x"))
+        rows.append((f"traversal_per_level_{wl}_{shape}_us", t_level * 1e6,
+                     f"levels={len(lm)}"))
+    t_oracle = _med_time(lambda: oracle(tree, q_uniform))
+    rows.append((f"traversal_oracle_jnp_{shape}_us", t_oracle * 1e6, ""))
+
+
 def kernel_micro(rows: list) -> None:
     from repro.kernels import ops
     rng = np.random.default_rng(0)
@@ -86,9 +167,11 @@ def kernel_micro(rows: list) -> None:
                  f"{BH*T/dtm/1e6:.2f}Mtok/s"))
 
 
-def main() -> list:
+def main(quick: bool = False) -> list:
     rows: list = []
-    serving_throughput(rows)
+    serving_throughput(rows, n_points=30_000 if quick else 120_000,
+                       batch=256 if quick else 512)
+    traversal_micro(rows)
     kernel_micro(rows)
     for name, val, extra in rows:
         print(f"{name},{val:.2f},{extra}")

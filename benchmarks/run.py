@@ -1,16 +1,41 @@
-"""Benchmark orchestrator. ``python -m benchmarks.run [--full]``.
+"""Benchmark orchestrator. ``python -m benchmarks.run [--full] [--json F]``.
 
 One section per paper artifact:
   paper_tables — Figures 7/8 + Tables III/IV (the reproduction)
   engine_bench — batched-serving throughput + kernel microbenches
   roofline     — summarizes the dry-run roofline terms if results exist
 
-Prints ``name,value,derived`` CSV lines per benchmark.
+Prints ``name,value,derived`` CSV lines per benchmark. With ``--json`` the
+same rows are also written as structured JSON (name → {value, derived}) so
+the perf trajectory is machine-trackable across PRs (see BENCH_engine.json).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import traceback
+
+
+def _rows_to_dict(rows: list) -> dict:
+    """Normalize a section's rows to {name: {value, derived}}.
+
+    engine_bench/roofline yield (name, value, extra) tuples; paper_tables
+    yields dicts keyed by column — those are passed through under a
+    synthetic row name.
+    """
+    out: dict = {}
+    for i, r in enumerate(rows):
+        if isinstance(r, dict):
+            if "arch" in r and "shape" in r:        # roofline rows
+                key = f"{r['arch']}_{r['shape']}"
+            else:                                   # paper_tables rows
+                name = r.get("dataset", r.get("name", f"row{i}"))
+                key = f"{name}_M{r['M']}" if "M" in r else str(name)
+            out[key] = r
+        else:
+            name, value, extra = r
+            out[name] = {"value": value, "derived": extra}
+    return out
 
 
 def main() -> None:
@@ -21,9 +46,12 @@ def main() -> None:
                    help="smoke-scale (CI) run")
     p.add_argument("--only", default=None,
                    help="run a single section by name")
+    p.add_argument("--json", default=None, metavar="FILE",
+                   help="also write results as structured JSON")
     args = p.parse_args()
 
     sections = []
+    results: dict = {}
 
     def want(name: str) -> bool:
         return args.only is None or args.only == name
@@ -32,8 +60,9 @@ def main() -> None:
         from benchmarks import paper_tables
         print("== paper_tables (Fig 7/8, Tables III/IV) ==")
         try:
-            paper_tables.main(full=args.full,
-                              quick=args.quick or not args.full)
+            rows = paper_tables.main(full=args.full,
+                                     quick=args.quick or not args.full)
+            results["paper_tables"] = _rows_to_dict(rows or [])
             sections.append("paper_tables")
         except Exception:
             traceback.print_exc()
@@ -42,7 +71,8 @@ def main() -> None:
         from benchmarks import engine_bench
         print("== engine_bench (beyond-paper throughput) ==")
         try:
-            engine_bench.main()
+            rows = engine_bench.main(quick=args.quick)
+            results["engine_bench"] = _rows_to_dict(rows or [])
             sections.append("engine_bench")
         except Exception:
             traceback.print_exc()
@@ -51,10 +81,16 @@ def main() -> None:
         from benchmarks import roofline
         print("== roofline (from dry-run artifacts) ==")
         try:
-            roofline.main()
+            rows = roofline.main()
+            results["roofline"] = _rows_to_dict(rows or [])
             sections.append("roofline")
         except Exception:
             traceback.print_exc()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+        print(f"wrote {args.json}")
 
     print(f"== done: {', '.join(sections)} ==")
 

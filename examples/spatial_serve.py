@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.core import build, device_tree, engine, labels
 from repro.core.hybrid import hybrid_query
 from repro.core.rtree import RTree
+from repro.launch import mesh as pmesh
 from repro.data import synth
 
 parser = argparse.ArgumentParser()
@@ -61,7 +62,7 @@ for b in range(args.batches):
         take = np.concatenate([take, order[:args.batch_size - take.size]])
     q = jnp.asarray(workload.queries[take])
     if step is not None:
-        with jax.set_mesh(mesh):
+        with pmesh.set_mesh(mesh):
             out = step(hybrid_s, q)
         acc = np.asarray(out.leaf_accesses)
         ai = np.asarray(out.used_ai)

@@ -19,12 +19,24 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
+
+try:  # jax >= 0.6: top-level export
+    _shard_map = jax.shard_map
+except AttributeError:  # older jax: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map
+# The replication-check kwarg was renamed check_rep → check_vma; detect it
+# from the signature rather than inferring from the export location (some
+# versions export jax.shard_map but still take check_rep).
+_SHARD_MAP_CHECK_KW = (
+    "check_vma" if "check_vma" in inspect.signature(_shard_map).parameters
+    else "check_rep")
 
 from repro.core.device_tree import DeviceTree, Level
 from repro.core.hybrid import HybridTree
@@ -145,7 +157,19 @@ def make_serve_step(mesh, cfg: EngineConfig, *, kind: str,
     batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
 
     def local_visited(tree: DeviceTree, queries):
-        """[B_loc, L_loc] visited mask on the local leaf shard."""
+        """[B_loc, L_loc] visited mask on the local leaf shard.
+
+        Internal levels are replicated, so the fused single-pass kernel
+        applies unchanged per shard: the local leaf level's ``parent``
+        indices point into the (replicated) last internal level, and the
+        sharding pad's never-intersecting leaf MBRs stay dead regardless of
+        their parent slot.
+        """
+        if cfg.use_kernel:
+            from repro.kernels import ops as kops
+            return kops.traverse_fused(
+                queries, [lv.mbrs for lv in tree.levels],
+                [lv.parent for lv in tree.levels])
         mask = traversal._cross_intersect(queries, tree.levels[0].mbrs,
                                           cfg.use_kernel)
         for level in tree.levels[1:-1]:
@@ -160,7 +184,7 @@ def make_serve_step(mesh, cfg: EngineConfig, *, kind: str,
         B = queries.shape[0]
         L_loc = tree.levels[-1].mbrs.shape[0]
         midx = jax.lax.axis_index(model_axis)
-        n_model = jax.lax.axis_size(model_axis)
+        n_model = mesh.shape[model_axis]  # static (jax.lax.axis_size is new)
 
         # ---------------- R path (local leaf shard) ----------------
         vis = local_visited(tree, queries)                    # [B, L_loc]
@@ -269,11 +293,11 @@ def make_serve_step(mesh, cfg: EngineConfig, *, kind: str,
                        r_truncated=P(baxes))
 
     def serve_step(h: HybridTree, queries: jnp.ndarray) -> ServeStats:
-        shard = jax.shard_map(
+        shard = _shard_map(
             body, mesh=mesh,
             in_specs=(tree_shardings_p(h, model_axis), qspec),
             out_specs=ospec,
-            check_vma=False)
+            **{_SHARD_MAP_CHECK_KW: False})
         return shard(h, queries)
 
     return serve_step

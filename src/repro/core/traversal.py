@@ -4,9 +4,12 @@ This is the TPU-native replacement for root-to-leaf pointer chasing: the
 frontier at each level is a ``[B, N_l]`` boolean mask; expansion to the next
 level is one gather (child → parent) plus one batched rectangle-intersection.
 
-The intersection hot-spot runs through the Pallas kernel
-(``repro.kernels.mbr_intersect``) when ``use_kernel=True``; the pure-jnp path
-doubles as its oracle.
+With ``use_kernel=True`` the whole root→leaf walk runs as one fused Pallas
+kernel (``repro.kernels.traverse_fused``) — the frontier stays in VMEM across
+levels instead of round-tripping [B, N_l] masks through HBM per level. The
+pure-jnp per-level path doubles as its oracle. Mask→index compaction is
+sort-free (prefix-count ranks + rowwise scatter), replacing the former
+``top_k``-shaped implementations, which are kept as ``*_topk`` oracles.
 
 Also implements the *refinement* step (exact point-in-rect filtering of the
 visited/predicted leaves) and the overlap ratio α = TN/VN (§III-A2).
@@ -38,6 +41,29 @@ def visited_leaf_mask(tree: DeviceTree, queries: jnp.ndarray,
 
     Exactly reproduces the recursive traversal's visited set: a leaf is
     visited iff every ancestor MBR (and its own) intersects the query.
+
+    With ``use_kernel`` the whole walk runs as a single fused ``pallas_call``
+    (``repro.kernels.traverse_fused``): the internal frontier never leaves
+    VMEM and only the final [B, L] mask is materialized. Without it, the
+    level-by-level jnp path below doubles as the oracle.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.traverse_fused(
+            queries, [lv.mbrs for lv in tree.levels],
+            [lv.parent for lv in tree.levels])
+    return visited_leaf_mask_per_level(tree, queries, use_kernel=False)
+
+
+def visited_leaf_mask_per_level(tree: DeviceTree, queries: jnp.ndarray,
+                                use_kernel: bool = False) -> jnp.ndarray:
+    """Level-synchronous traversal: one [B, N_l] intersection per level.
+
+    The pre-fusion hot path, kept as the fused kernel's benchmark baseline
+    and oracle (``ops.traverse_fused`` falls back to this same loop shape,
+    kernel-accelerated, when a tree's working set exceeds the VMEM
+    budget). ``use_kernel`` here only accelerates each level's
+    cross-intersection; frontier masks still round-trip through HBM.
     """
     mask = _cross_intersect(queries, tree.levels[0].mbrs, use_kernel)  # [B, 1]
     for level in tree.levels[1:]:
@@ -57,10 +83,28 @@ class RefineResult(NamedTuple):
 def compact_mask(mask: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
     """[B, L] bool → (indices [B, k] i32, valid [B, k] bool).
 
-    Takes the first ``k`` set leaves per row (leaf-ID order — ``top_k`` on
-    equal keys prefers lower indices). Overflow beyond ``k`` is reported by
-    the caller via ``overflowed()`` and handled by the exact fallback path.
+    Takes the first ``k`` set leaves per row (leaf-ID order). Sort-free:
+    each set bit's output slot is its exclusive prefix count (cumsum), and a
+    rowwise scatter places the column index there — O(B·L) data movement
+    instead of ``top_k``'s sort-shaped O(B·L·log). Bits past the ``k``-th
+    land in a discarded spill slot; overflow is reported by the caller via
+    ``overflowed()`` and handled by the exact fallback path.
     """
+    B, L = mask.shape
+    m = mask.astype(jnp.int32)
+    rank = jnp.cumsum(m, axis=-1) - m                    # exclusive prefix
+    slot = jnp.where((m > 0) & (rank < k), rank, k)      # k = spill slot
+    cols = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None, :], (B, L))
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    idx = jnp.zeros((B, k + 1), jnp.int32).at[rows, slot].max(cols)[:, :k]
+    valid = jnp.arange(k, dtype=jnp.int32)[None, :] < \
+        jnp.sum(m, axis=-1)[:, None]
+    return jnp.where(valid, idx, 0), valid
+
+
+def compact_mask_topk(mask: jnp.ndarray, k: int
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-optimization ``top_k``-based compaction (equivalence oracle)."""
     k_eff = min(k, mask.shape[-1])
     vals, idx = jax.lax.top_k(mask.astype(jnp.int32), k_eff)
     if k_eff < k:  # pad slots so callers keep a static [B, k] shape
@@ -114,7 +158,29 @@ def scatter_rows(base: jnp.ndarray, idx: jnp.ndarray,
 
 def gather_result_ids(tree: DeviceTree, refine: RefineResult,
                       max_results: int) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Flatten qualifying entry ids to [B, max_results] (padded with -1)."""
+    """Flatten qualifying entry ids to [B, max_results] (padded with -1).
+
+    Sort-free, same scheme as ``compact_mask``: prefix-count ranks pick the
+    first ``max_results`` qualifying entries in flat (leaf-slot, entry)
+    order; the spill slot absorbs everything past the bound.
+    """
+    ids = tree.leaf_entry_ids[refine.leaf_idx]              # [B, K, M]
+    B = ids.shape[0]
+    flat_ids = ids.reshape(B, -1)
+    flat_in = refine.inside.reshape(B, -1).astype(jnp.int32)
+    rank = jnp.cumsum(flat_in, axis=-1) - flat_in
+    slot = jnp.where((flat_in > 0) & (rank < max_results), rank, max_results)
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    out = jnp.full((B, max_results + 1), -1, jnp.int32).at[rows, slot].max(
+        jnp.where(flat_in > 0, flat_ids, -1))[:, :max_results]
+    trunc = jnp.sum(flat_in, axis=-1) > max_results
+    return out, trunc
+
+
+def gather_result_ids_topk(tree: DeviceTree, refine: RefineResult,
+                           max_results: int
+                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-optimization ``top_k``-based gather (equivalence oracle)."""
     ids = tree.leaf_entry_ids[refine.leaf_idx]              # [B, K, M]
     B = ids.shape[0]
     flat_ids = ids.reshape(B, -1)

@@ -20,6 +20,7 @@ from repro.kernels import ref
 from repro.kernels import mbr_intersect as _mbr
 from repro.kernels import leaf_refine as _refine
 from repro.kernels import forest_infer as _forest
+from repro.kernels import traverse_fused as _traverse
 from repro.kernels import wkv6 as _wkv6
 
 
@@ -58,6 +59,82 @@ def mbr_intersect(queries: jnp.ndarray, mbrs: jnp.ndarray,
     out = _mbr.mbr_intersect_t(qp.T, mp.T, tb=tb, tn=tn,
                                interpret=_interpret())
     return out[:B, :N]
+
+
+_NEVER_RECT = (float("inf"), float("inf"), float("-inf"), float("-inf"))
+
+
+def traverse_fused(queries: jnp.ndarray, level_mbrs, level_parents,
+                   tb: int | None = None, tl: int | None = None
+                   ) -> jnp.ndarray:
+    """Fused root→leaf traversal: [B, 4] → visited-leaf mask [B, L] bool.
+
+    ``level_mbrs``: one [N_l, 4] array per tree level, root first, leaf
+    level last. ``level_parents``: matching [N_l] i32 index into the level
+    above (entry 0 unused). Single ``pallas_call`` — the internal frontier
+    stays in VMEM; only the leaf mask is written to HBM.
+
+    Falls back to the jnp oracle when kernels are off; when the tree is a
+    single level (root == leaves) it is one ``mbr_intersect``; and when the
+    estimated VMEM working set (frontier scratch + replicated internal
+    operands + largest one-hot expansion) exceeds the budget, it runs the
+    level-by-level loop with the ``mbr_intersect`` *kernel* per level —
+    never a silent drop to pure jnp.
+    """
+    n_levels = len(level_mbrs)
+    B = queries.shape[0]
+    L = level_mbrs[-1].shape[0]
+    if not kernels_enabled():
+        return ref.traverse_fused(queries, level_mbrs, level_parents)
+    if n_levels == 1:
+        return mbr_intersect(queries, level_mbrs[0])
+
+    # Tile choice: on TPU, DEF_TB×DEF_TL VMEM tiles (grid cells are nearly
+    # free and pl.when early exit works per tile). In interpret mode fold
+    # everything into one tile per query-block — emulated grid cells are
+    # not free, the walk would rerun per leaf tile, and the interpret form
+    # early-exits on SUB_TL subtiles *inside* the kernel instead.
+    interp = _interpret()
+    L128 = (max(128, L) + 127) // 128 * 128
+    if tb is None:
+        tb = min(1024 if interp else _traverse.DEF_TB,
+                 (max(8, B) + 7) // 8 * 8)
+    if tl is None:
+        tl = L128 if interp and L128 <= 8192 else \
+            min(_traverse.DEF_TL, L128)
+
+    widths = [int(m.shape[0]) for m in level_mbrs[:-1]]
+    padded = [n + (-n) % _traverse.LANE for n in widths]
+    if _traverse.vmem_estimate(padded, tb, tl) > _traverse.VMEM_BUDGET:
+        # Kernel-accelerated per-level fallback (frontier masks round-trip
+        # HBM, but each level's intersection still runs on the kernel).
+        mask = mbr_intersect(queries, level_mbrs[0])
+        for mbrs, parent in zip(level_mbrs[1:], level_parents[1:]):
+            mask = mask[:, parent] & mbr_intersect(queries, mbrs)
+        return mask
+    never = jnp.asarray(_NEVER_RECT, jnp.float32)
+
+    def pad_level(mbrs, parent, mult):
+        n = mbrs.shape[0]
+        mp = _pad_to(mbrs.astype(jnp.float32), 0, mult, 0.0)
+        if mp.shape[0] != n:
+            mp = mp.at[n:].set(never)
+        pp = _pad_to(parent.astype(jnp.int32), 0, mult, 0)
+        return mp.T, pp[None, :]
+
+    qp = _pad_to(queries.astype(jnp.float32), 0, tb, 0.0)
+    int_mbrs_t, int_parents = [], []
+    for lvl in range(n_levels - 1):
+        mt, pt = pad_level(level_mbrs[lvl], level_parents[lvl],
+                           _traverse.LANE)
+        int_mbrs_t.append(mt)
+        if lvl > 0:
+            int_parents.append(pt)
+    leaf_mt, leaf_pt = pad_level(level_mbrs[-1], level_parents[-1], tl)
+    out = _traverse.traverse_fused_t(
+        qp.T, tuple(int_mbrs_t), tuple(int_parents), leaf_mt, leaf_pt,
+        tb=tb, tl=tl, interpret=_interpret())
+    return out[:B, :L]
 
 
 def leaf_refine(queries: jnp.ndarray, leaf_entries: jnp.ndarray,

@@ -19,6 +19,21 @@ def mbr_intersect(queries: jnp.ndarray, mbrs: jnp.ndarray) -> jnp.ndarray:
     )
 
 
+def traverse_fused(queries: jnp.ndarray, level_mbrs, level_parents
+                   ) -> jnp.ndarray:
+    """Level-synchronous traversal ground truth: [B, 4] → [B, L] bool.
+
+    ``level_mbrs``: one [N_l, 4] per level, root first (leaf level last);
+    ``level_parents``: matching [N_l] i32 (entry 0 unused — the root has no
+    parent). A leaf is visited iff every ancestor MBR and its own intersect
+    the query; identical to ``core.traversal.visited_leaf_mask``.
+    """
+    mask = mbr_intersect(queries, level_mbrs[0])
+    for mbrs, parent in zip(level_mbrs[1:], level_parents[1:]):
+        mask = mask[:, parent] & mbr_intersect(queries, mbrs)
+    return mask
+
+
 def leaf_refine(queries: jnp.ndarray, ex: jnp.ndarray, ey: jnp.ndarray,
                 leaf_idx: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
     """queries [B,4], ex/ey [L,M], leaf_idx [B,K], valid [B,K] → [B,K,M]."""

@@ -1,0 +1,271 @@
+"""Pallas TPU kernel: fused single-pass root→leaf R-tree traversal.
+
+The level-synchronous traversal in ``repro.core.traversal`` launches one
+dense ``[B, N_level]`` cross-intersection *per tree level* and round-trips
+full boolean frontier masks through HBM between launches. This kernel walks
+**all** levels in a single ``pallas_call``:
+
+* Internal levels are tiny (they shrink geometrically from the leaves) and
+  replicated, so their MBRs fit in VMEM whole. The frontier mask for a
+  query-tile is computed once per query-tile (``j == 0``) and kept resident
+  in a VMEM scratch buffer across all leaf tiles of that query-tile — it
+  never touches HBM.
+
+* Frontier expansion (``mask[:, parent]``) is rewritten as a one-hot matmul
+  so it runs on the MXU instead of a lane-dimension gather (which Mosaic
+  does not vectorize): ``alive = mask_f32 @ onehot(parent)``. The one-hot is
+  built *inside* the kernel from the ``[1, N]`` int32 parent row with a
+  broadcasted-iota compare, so no O(N_prev·N) matrix ever crosses HBM.
+
+* The leaf level is tiled over the grid's minor axis. A ``pl.when`` guard
+  skips the per-leaf-tile rectangle-intersection entirely when the one-hot
+  expansion shows the whole tile is dead (every parent of every leaf in the
+  tile failed), so dead subtrees generate no VPU work — the paper's "skip
+  extraneous node accesses", applied to the traversal itself.
+
+Only the final ``[B, L]`` visited-leaf mask is written out.
+
+Layout: rectangles arrive transposed/planar (``[4, N]``) as in
+``mbr_intersect.py``; parent index rows are ``[1, N]`` int32. ``ops.py``
+handles padding (never-intersecting rects; parent = 0) and transposition.
+Padding-lane parents point at real (or padding) nodes, which is harmless:
+a padding rect can never intersect, so its mask lane is always dead.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEF_TB = 256    # query-tile (sublane axis)
+DEF_TL = 512    # leaf-tile (lane axis, multiple of 128)
+SUB_TL = 512    # interpret-form early-exit subtile within the leaf tile
+LANE = 128      # internal-level width quantum
+# VMEM budget (bytes) for the TPU-form kernel's resident working set —
+# frontier scratch, replicated internal-level operands, and the largest
+# one-hot expansion matrix. Real VMEM is ~16 MiB/core; leave headroom for
+# double buffering. ops.py estimates the working set per tree and falls
+# back to the level-by-level path when it exceeds this.
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def vmem_estimate(int_widths_padded: Sequence[int], tb: int, tl: int) -> int:
+    """Rough VMEM working-set bytes for the fused kernel.
+
+    ``int_widths_padded``: lane-padded internal level widths, root first.
+    Counts the frontier scratch, all replicated internal operands (MBRs +
+    parent rows), the query/leaf/output tiles, and the largest transient
+    one-hot matmul operand (consecutive internal pairs and the leaf
+    expansion) — the term the frontier width alone does not bound.
+    """
+    n_last = int_widths_padded[-1]
+    est = tb * n_last * 4                                   # scratch
+    est += sum(4 * n * 4 + n * 4 for n in int_widths_padded)  # mbrs+parents
+    est += 4 * tb * 4 + 4 * tl * 4 + 1 * tl * 4 + tb * tl   # q, leaf, out
+    onehots = [a * b for a, b in zip(int_widths_padded[:-1],
+                                     int_widths_padded[1:])]
+    onehots.append(n_last * tl)
+    est += max(onehots) * 4
+    return est
+
+
+def _tile_intersect(q, m):
+    """q [4, TB] × m [4, TN] values → [TB, TN] bool (closed rectangles).
+
+    Takes materialized values, not refs: each ref index-read costs a masked
+    load (emulated one-by-one in interpret mode) — callers read each block
+    once and slice the value.
+    """
+    qx0 = q[0, :][:, None]
+    qy0 = q[1, :][:, None]
+    qx1 = q[2, :][:, None]
+    qy1 = q[3, :][:, None]
+    mx0 = m[0, :][None, :]
+    my0 = m[1, :][None, :]
+    mx1 = m[2, :][None, :]
+    my1 = m[3, :][None, :]
+    return (qx0 <= mx1) & (mx0 <= qx1) & (qy0 <= my1) & (my0 <= qy1)
+
+
+def _expand_mxu(mask_f32, parent_row, n_prev):
+    """Frontier expansion: alive[b, c] > 0 iff mask[b, parent_row[c]] set.
+
+    mask_f32 [TB, n_prev] (0/1), parent_row [n] i32 → alive [TB, n] f32.
+    A gather along the lane dimension is what this *means*, but Mosaic does
+    not vectorize lane gathers — so the hardware form is a one-hot matmul on
+    the MXU. The one-hot is built in VMEM from the int32 parent row with a
+    broadcasted-iota compare; no O(n_prev·n) matrix ever crosses HBM.
+    """
+    n = parent_row.shape[0]
+    onehot = (parent_row[None, :] ==
+              jax.lax.broadcasted_iota(jnp.int32, (n_prev, n), 0)
+              ).astype(jnp.float32)
+    return jax.lax.dot(mask_f32, onehot, preferred_element_type=jnp.float32)
+
+
+def _make_kernel(n_int: int, tb: int, tl: int, tpu_form: bool):
+    """Build the kernel body for a tree with ``n_int`` internal levels.
+
+    ``tpu_form=True`` is the hardware graph: one-hot-matmul expansion on the
+    MXU, the internal walk run once per query-tile under ``pl.when(j == 0)``
+    with the frontier persisted in VMEM scratch, and a ``pl.when`` tile-level
+    early exit so leaf tiles under a dead frontier skip the intersection
+    (predication is ~free on TPU).
+
+    ``tpu_form=False`` is the branch-free interpret form: same semantics,
+    but gather-based expansion and unconditional writes — in interpret mode
+    every ``pl.when`` lowers to a ``lax.cond`` that functionalizes the
+    output/scratch refs (full-array copies per branch), so predication there
+    *costs* rather than saves. Tests validate both forms.
+    """
+
+    def kernel(*refs):
+        q_ref = refs[0]
+        int_m = refs[1:1 + n_int]                       # [4, N_l] each
+        int_p = refs[1 + n_int:2 * n_int]               # [1, N_l], levels 1..
+        leaf_m = refs[2 * n_int]                        # [4, TL]
+        leaf_p = refs[2 * n_int + 1]                    # [1, TL]
+        o_ref = refs[2 * n_int + 2]                     # [TB, TL] bool
+        frontier_ref = refs[2 * n_int + 3]              # [TB, N_last] f32
+
+        q = q_ref[:, :]                                  # [4, TB]
+
+        if tpu_form:
+            j = pl.program_id(1)
+
+            @pl.when(j == 0)
+            def _walk_internal():
+                # Root level: plain intersection (no parent).
+                mask = _tile_intersect(q, int_m[0][:, :]).astype(jnp.float32)
+                for l in range(1, n_int):
+                    alive = _expand_mxu(mask, int_p[l - 1][0, :],
+                                        int_m[l - 1].shape[1])
+                    hit = _tile_intersect(q, int_m[l][:, :])
+                    mask = jnp.where((alive > 0.0) & hit, 1.0, 0.0)
+                frontier_ref[:, :] = mask
+
+            frontier = frontier_ref[:, :]                # [TB, N_last]
+            alive = _expand_mxu(frontier, leaf_p[0, :], frontier.shape[1])
+            any_live = jnp.max(alive) > 0.0
+
+            @pl.when(jnp.logical_not(any_live))
+            def _dead_tile():
+                o_ref[:, :] = jnp.zeros((tb, tl), jnp.bool_)
+
+            @pl.when(any_live)
+            def _live_tile():
+                o_ref[:, :] = (alive > 0.0) & _tile_intersect(
+                    q, leaf_m[:, :])
+        else:
+            # Interpret form. Same semantics, restructured for the emulated
+            # grid loop, which materializes every intermediate and turns any
+            # ref-touching ``pl.when`` into full-buffer functionalization
+            # copies:
+            #   * the whole leaf axis is one grid tile; early exit runs as
+            #     *value-level* ``lax.cond``s (branches return values, touch
+            #     no refs) — an outer cond over the whole tile, then one per
+            #     SUB-wide leaf subtile, each gated on a bounding box of the
+            #     subtile's leaf MBRs computed in-kernel, so dead subtrees
+            #     skip their intersection entirely;
+            #   * the internal walk runs once per query tile, inside the
+            #     outer live branch — one concatenated intersection over all
+            #     internal levels, boolean masks end to end, lane gathers
+            #     instead of one-hot matmuls.
+            lm_v = leaf_m[:, :]
+            leaf_par = leaf_p[0, :]
+
+            def subtile_hit(sm):
+                return jnp.any((q[0, :] <= jnp.max(sm[2, :]))
+                               & (jnp.min(sm[0, :]) <= q[2, :])
+                               & (q[1, :] <= jnp.max(sm[3, :]))
+                               & (jnp.min(sm[1, :]) <= q[3, :]))
+
+            def live():
+                int_all = jnp.concatenate([m[:, :] for m in int_m], axis=1)
+                hit_all = _tile_intersect(q, int_all)        # [TB, ΣN_l]
+                off = int_m[0].shape[1]
+                mask = hit_all[:, :off]
+                for l in range(1, n_int):
+                    n = int_m[l].shape[1]
+                    mask = mask[:, int_p[l - 1][0, :]] & \
+                        hit_all[:, off:off + n]
+                    off += n
+                outs = []
+                for s in range(0, tl, SUB_TL):
+                    e = min(s + SUB_TL, tl)
+                    sm = lm_v[:, s:e]
+                    outs.append(jax.lax.cond(
+                        subtile_hit(sm),
+                        lambda sm=sm, s=s, e=e: mask[:, leaf_par[s:e]]
+                        & _tile_intersect(q, sm),
+                        lambda e=e, s=s: jnp.zeros((tb, e - s), jnp.bool_)))
+                return outs[0] if len(outs) == 1 else \
+                    jnp.concatenate(outs, axis=1)
+
+            o_ref[:, :] = jax.lax.cond(
+                subtile_hit(lm_v), live,
+                lambda: jnp.zeros((tb, tl), jnp.bool_))
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tb", "tl", "interpret", "tpu_form"))
+def traverse_fused_t(q_t: jnp.ndarray,
+                     int_mbrs_t: Sequence[jnp.ndarray],
+                     int_parents: Sequence[jnp.ndarray],
+                     leaf_mbrs_t: jnp.ndarray,
+                     leaf_parent: jnp.ndarray, *,
+                     tb: int = DEF_TB, tl: int = DEF_TL,
+                     interpret: bool = False,
+                     tpu_form: bool | None = None) -> jnp.ndarray:
+    """Transposed-layout entry point.
+
+    ``q_t`` [4, B]; ``int_mbrs_t`` one [4, N_l] per internal level (root
+    first, each N_l a multiple of 128); ``int_parents`` one [1, N_l] i32 per
+    internal level *below the root*; ``leaf_mbrs_t`` [4, L];
+    ``leaf_parent`` [1, L] i32 (into the last internal level). B must be a
+    multiple of ``tb`` and L of ``tl`` (ops.py pads). Returns [B, L] bool.
+
+    ``tpu_form`` defaults to ``not interpret``; pass ``tpu_form=True`` with
+    ``interpret=True`` to validate the exact hardware graph off-TPU.
+    """
+    if tpu_form is None:
+        tpu_form = not interpret
+    n_int = len(int_mbrs_t)
+    assert n_int >= 1 and len(int_parents) == n_int - 1
+    _, B = q_t.shape
+    _, L = leaf_mbrs_t.shape
+    assert B % tb == 0 and L % tl == 0, (B, L, tb, tl)
+    n_last = int_mbrs_t[-1].shape[1]
+    grid = (B // tb, L // tl)
+
+    rep = lambda shape: pl.BlockSpec(shape, lambda i, j: (0, 0))  # noqa: E731
+    in_specs = [pl.BlockSpec((4, tb), lambda i, j: (0, i))]
+    in_specs += [rep((4, m.shape[1])) for m in int_mbrs_t]
+    in_specs += [rep((1, p.shape[1])) for p in int_parents]
+    in_specs += [
+        pl.BlockSpec((4, tl), lambda i, j: (0, j)),
+        pl.BlockSpec((1, tl), lambda i, j: (0, j)),
+    ]
+
+    args = ([q_t.astype(jnp.float32)]
+            + [m.astype(jnp.float32) for m in int_mbrs_t]
+            + [p.astype(jnp.int32) for p in int_parents]
+            + [leaf_mbrs_t.astype(jnp.float32),
+               leaf_parent.astype(jnp.int32)])
+
+    return pl.pallas_call(
+        _make_kernel(n_int, tb, tl, tpu_form=tpu_form),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tb, tl), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, L), jnp.bool_),
+        scratch_shapes=[pltpu.VMEM((tb, n_last), jnp.float32)],
+        interpret=interpret,
+    )(*args)

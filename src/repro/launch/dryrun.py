@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.launch import sharding as shd
+from repro.launch import mesh as pmesh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (ACCUM, SHAPE_DEFS, cell_supported,
                                 decode_specs, input_specs, state_specs)
@@ -187,7 +188,7 @@ def _airtree_cell(shape: str, multi_pod: bool):
                            max_pred=16, score_union=union)
     step = eng.make_serve_step(mesh, cfg, kind="knn")
     q_spec = f32(B, 4)
-    with jax.set_mesh(mesh):
+    with pmesh.set_mesh(mesh):
         lowered = jax.jit(step).lower(h, q_spec)
     meta = dict(arch="airtree", shape=shape,
                 mesh="2x16x16" if multi_pod else "16x16", kind="serve",
@@ -223,7 +224,7 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
         batch_spec = input_specs(cfg, shape)
         in_sh = (shd.params_shardings(state_spec, mesh),
                  shd.batch_shardings(batch_spec, mesh))
-        with jax.set_mesh(mesh):
+        with pmesh.set_mesh(mesh):
             lowered = jax.jit(step, in_shardings=in_sh).lower(
                 state_spec, batch_spec)
         return lowered, mesh, meta
@@ -239,7 +240,7 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
 
         in_sh = (shd.params_shardings(params_spec, mesh),
                  shd.batch_shardings(batch_spec, mesh))
-        with jax.set_mesh(mesh):
+        with pmesh.set_mesh(mesh):
             lowered = jax.jit(prefill, in_shardings=in_sh).lower(
                 params_spec, batch_spec)
         return lowered, mesh, meta
@@ -254,7 +255,7 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
     in_sh = (shd.params_shardings(params_spec, mesh),
              shd.cache_shardings(cache_spec, mesh),
              shd.batch_shardings(tok_spec, mesh)["tokens"])
-    with jax.set_mesh(mesh):
+    with pmesh.set_mesh(mesh):
         lowered = jax.jit(serve_step, in_shardings=in_sh).lower(
             params_spec, cache_spec, tok_spec["tokens"])
     meta["cache_bytes_global"] = sum(
@@ -314,7 +315,7 @@ def _lower_for_cost(cfg: ModelConfig, shape: str, mesh):
         batch_spec = input_specs(cfg, shape)
         in_sh = (shd.params_shardings(state_spec, mesh),
                  shd.batch_shardings(batch_spec, mesh))
-        with jax.set_mesh(mesh):
+        with pmesh.set_mesh(mesh):
             return jax.jit(step, in_shardings=in_sh).lower(state_spec,
                                                            batch_spec)
     params_spec = jax.eval_shape(
@@ -325,7 +326,7 @@ def _lower_for_cost(cfg: ModelConfig, shape: str, mesh):
         fn = lambda p, b: tf.forward(cfg, p, b, remat_policy=None)  # noqa
         in_sh = (shd.params_shardings(params_spec, mesh),
                  shd.batch_shardings(batch_spec, mesh))
-        with jax.set_mesh(mesh):
+        with pmesh.set_mesh(mesh):
             return jax.jit(fn, in_shardings=in_sh).lower(params_spec,
                                                          batch_spec)
     from repro.serving import decode as dec
@@ -334,7 +335,7 @@ def _lower_for_cost(cfg: ModelConfig, shape: str, mesh):
     in_sh = (shd.params_shardings(params_spec, mesh),
              shd.cache_shardings(cache_spec, mesh),
              shd.batch_shardings(tok_spec, mesh)["tokens"])
-    with jax.set_mesh(mesh):
+    with pmesh.set_mesh(mesh):
         return jax.jit(fn, in_shardings=in_sh).lower(
             params_spec, cache_spec, tok_spec["tokens"])
 

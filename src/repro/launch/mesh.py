@@ -27,3 +27,14 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, *,
 def batch_axes(mesh) -> tuple:
     """The axes the global batch shards over."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context manager, portable across jax versions.
+
+    ``jax.set_mesh`` is recent; on older jax the ``Mesh`` object itself is
+    the context manager that installs the ambient mesh.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

@@ -20,6 +20,7 @@ import numpy as np
 from repro.core import build, device_tree as dt, engine, labels
 from repro.core.hybrid import hybrid_query
 from repro.core.rtree import RTree
+from repro.launch import mesh as pmesh
 from repro.data import synth
 
 
@@ -69,7 +70,7 @@ def main() -> None:
         hyb_s = engine.pad_tree_for_sharding(hyb, n // nd)
         step = engine.make_serve_step(mesh, engine.EngineConfig(),
                                       kind=args.classifier)
-        with jax.set_mesh(mesh):
+        with pmesh.set_mesh(mesh):
             stats = step(hyb_s, q)
             jax.block_until_ready(stats)
             t0 = time.time()

@@ -15,6 +15,7 @@ from repro.core import build, device_tree as dt, engine, labels  # noqa: E402
 from repro.core.hybrid import hybrid_query  # noqa: E402
 from repro.core.rtree import RTree  # noqa: E402
 from repro.data import synth  # noqa: E402
+from repro.launch import mesh as pmesh  # noqa: E402
 
 
 def main() -> int:
@@ -34,7 +35,7 @@ def main() -> int:
     for union in ("pmax", "topk"):
         step = engine.make_serve_step(mesh, engine.EngineConfig(
             max_visited=64, max_pred=32, score_union=union), kind="knn")
-        with jax.set_mesh(mesh):
+        with pmesh.set_mesh(mesh):
             stats = step(hyb_p, q)
         checks = {
             "n_results": np.array_equal(np.asarray(stats.n_results),

@@ -6,7 +6,7 @@ property tests for the geometric kernels.
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from helpers.hypo import given, settings, st
 
 from repro.kernels import ops, ref
 

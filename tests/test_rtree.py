@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from helpers.hypo import given, settings, st
 
 from repro.core.rtree import RTree
 from repro.core import device_tree as dt, traversal

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from helpers.hypo import given, settings, st
 
 from repro import configs
 from repro.training import (checkpoint, compression, fault_tolerance,
