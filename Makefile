@@ -1,9 +1,14 @@
 # Local equivalents of the CI gates (.github/workflows/ci.yml).
 PYTHONPATH := src
 
-.PHONY: test smoke bench
+.PHONY: test test-all smoke bench
 
+# Fast default: skips @pytest.mark.slow (subprocess + interpret-heavy
+# sweeps). `test-all` is the tier-1 / scheduled-CI full run.
 test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow"
+
+test-all:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
 smoke: test

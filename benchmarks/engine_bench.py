@@ -128,6 +128,72 @@ def traversal_micro(rows: list, B: int = 256, L: int = 2048,
     rows.append((f"traversal_oracle_jnp_{shape}_us", t_oracle * 1e6, ""))
 
 
+def compaction_micro(rows: list, B: int = 256, L: int = 2048,
+                     fanout: int = 4, k: int = 64) -> None:
+    """Fused-compact epilogue vs mask+compact hand-off (traversal+refine).
+
+    Both sides end with identical scalar-prefetch ``leaf_refine`` inputs;
+    the difference under test is the traversal→compaction hand-off: the
+    mask+compact path writes the ``[B, L]`` visited mask to HBM and
+    re-scans it with the jnp ``compact_mask``, while the fused-compact path
+    emits the ``[B, k]`` slot table and per-row counts straight from the
+    kernel's VMEM-resident frontier. Interpret mode on CPU — relative cost
+    only, same workloads as ``traversal_micro``.
+    """
+    from repro.core.device_tree import DeviceTree, Level
+    from repro.core import traversal
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    mbrs, parents = _synth_levels(L, fanout, rng)
+    tree = DeviceTree(
+        levels=tuple(Level(mbrs=m, parent=p)
+                     for m, p in zip(mbrs, parents)),
+        leaf_entries=jnp.asarray(rng.uniform(-1, 1, (L, 8, 2)), jnp.float32),
+        leaf_entry_ids=jnp.zeros((L, 8), jnp.int32),
+        leaf_counts=jnp.full((L,), 8, jnp.int32),
+        n_points=0, max_entries=fanout)
+    lm = [lv.mbrs for lv in tree.levels]
+    lp = [lv.parent for lv in tree.levels]
+
+    lo = rng.uniform(-1, 1, (B, 2))
+    w = rng.uniform(0, 0.05, (B, 2))
+    q_uniform = jnp.asarray(np.concatenate([lo, lo + w], 1), jnp.float32)
+    c = rng.uniform(-0.8, 0.6, (1, 2))
+    lo = c + rng.uniform(0, 0.15, (B, 2))
+    w = rng.uniform(0, 0.02, (B, 2))
+    q_cluster = jnp.asarray(np.concatenate([lo, lo + w], 1), jnp.float32)
+    q_dead = jnp.asarray(
+        np.tile(np.array([[50.0, 50.0, 51.0, 51.0]], np.float32), (B, 1)))
+
+    @jax.jit
+    def fused_compact(q):
+        idx, valid, cnt = ops.traverse_compact(q, lm, lp, k)
+        ref = traversal.refine_leaves(tree, q, idx, valid, use_kernel=True)
+        return ref.counts, cnt
+
+    @jax.jit
+    def mask_compact(q):
+        mask = ops.traverse_fused(q, lm, lp)
+        idx, valid, cnt = traversal.compact_mask_counted(mask, k)
+        ref = traversal.refine_leaves(tree, q, idx, valid, use_kernel=True)
+        return ref.counts, cnt
+
+    shape = f"B{B}xL{L}k{k}"
+    for wl, q in [("uniform", q_uniform), ("clustered", q_cluster),
+                  ("alldead", q_dead)]:
+        # sanity: identical outputs, or the timing comparison is meaningless
+        fc, fcnt = fused_compact(q)
+        mc, mcnt = mask_compact(q)
+        np.testing.assert_array_equal(np.asarray(fc), np.asarray(mc))
+        np.testing.assert_array_equal(np.asarray(fcnt), np.asarray(mcnt))
+        t_fused = _med_time(lambda: fused_compact(q))
+        t_mask = _med_time(lambda: mask_compact(q))
+        rows.append((f"compact_fused_{wl}_{shape}_us", t_fused * 1e6,
+                     f"speedup_vs_mask_compact={t_mask / t_fused:.2f}x"))
+        rows.append((f"compact_mask_{wl}_{shape}_us", t_mask * 1e6, ""))
+
+
 def kernel_micro(rows: list) -> None:
     from repro.kernels import ops
     rng = np.random.default_rng(0)
@@ -172,6 +238,7 @@ def main(quick: bool = False) -> list:
     serving_throughput(rows, n_points=30_000 if quick else 120_000,
                        batch=256 if quick else 512)
     traversal_micro(rows)
+    compaction_micro(rows)
     kernel_micro(rows)
     for name, val, extra in rows:
         print(f"{name},{val:.2f},{extra}")

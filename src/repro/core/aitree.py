@@ -79,11 +79,13 @@ def ai_query(ait: AITree, tree: DeviceTree, queries: jnp.ndarray, *,
     L = tree.n_leaves
     scores, cell_over = predict_scores(ait, queries, L)
     pred = scores > ait.threshold                           # [B, L]
-    leaf_idx, valid = traversal.compact_mask(pred, ait.max_pred)
-    pred_over = traversal.overflowed(pred, ait.max_pred)
+    # counted compaction: one scan yields slots, validity, and the row
+    # count that feeds n_pred / the empty and overflow fallback signals
+    leaf_idx, valid, n_pred = traversal.compact_mask_counted(
+        pred, ait.max_pred)
+    pred_over = n_pred > ait.max_pred
     ref = traversal.refine_leaves(tree, queries, leaf_idx, valid,
                                   use_kernel=use_kernel)
-    n_pred = jnp.sum(pred.astype(jnp.int32), axis=-1)
     empty = n_pred == 0
     # paper's misprediction signal: a predicted leaf with no qualifying entry
     mispredict = jnp.any((ref.counts == 0) & valid, axis=-1)

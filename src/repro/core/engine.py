@@ -156,29 +156,6 @@ def make_serve_step(mesh, cfg: EngineConfig, *, kind: str,
     """
     batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
 
-    def local_visited(tree: DeviceTree, queries):
-        """[B_loc, L_loc] visited mask on the local leaf shard.
-
-        Internal levels are replicated, so the fused single-pass kernel
-        applies unchanged per shard: the local leaf level's ``parent``
-        indices point into the (replicated) last internal level, and the
-        sharding pad's never-intersecting leaf MBRs stay dead regardless of
-        their parent slot.
-        """
-        if cfg.use_kernel:
-            from repro.kernels import ops as kops
-            return kops.traverse_fused(
-                queries, [lv.mbrs for lv in tree.levels],
-                [lv.parent for lv in tree.levels])
-        mask = traversal._cross_intersect(queries, tree.levels[0].mbrs,
-                                          cfg.use_kernel)
-        for level in tree.levels[1:-1]:
-            mask = mask[:, level.parent] & traversal._cross_intersect(
-                queries, level.mbrs, cfg.use_kernel)
-        leaf = tree.levels[-1]
-        return mask[:, leaf.parent] & traversal._cross_intersect(
-            queries, leaf.mbrs, cfg.use_kernel)
-
     def body(h: HybridTree, queries):
         tree = h.tree
         B = queries.shape[0]
@@ -187,17 +164,26 @@ def make_serve_step(mesh, cfg: EngineConfig, *, kind: str,
         n_model = mesh.shape[model_axis]  # static (jax.lax.axis_size is new)
 
         # ---------------- R path (local leaf shard) ----------------
-        vis = local_visited(tree, queries)                    # [B, L_loc]
-        leaf_idx, valid = traversal.compact_mask(vis, cfg.max_visited)
-        r_trunc = jax.lax.psum(
-            traversal.overflowed(vis, cfg.max_visited).astype(jnp.int32),
-            model_axis) > 0
+        # Fused traverse+compact (with use_kernel, the [B, L_loc] visited
+        # mask stays in VMEM; only the [B, max_visited] slots + counts
+        # reach HBM — the jnp path materializes the mask but compacts with
+        # the identical scheme). Internal levels are replicated, so the
+        # traversal applies unchanged per shard: the local leaf level's
+        # parent indices point into the replicated last internal level, and
+        # the sharding pad's never-intersecting leaf MBRs stay dead
+        # regardless of their parent slot. Single-level (root == leaf)
+        # shards are handled downstream — the former engine-local loop
+        # self-gathered the root mask there.
+        cv = traversal.visited_leaves_compact(
+            tree, queries, cfg.max_visited, use_kernel=cfg.use_kernel)
+        leaf_idx, valid = cv.leaf_idx, cv.valid
+        n_vis_loc, over_loc = cv.n_visited, cv.overflow
+        r_trunc = jax.lax.psum(over_loc.astype(jnp.int32), model_axis) > 0
         ref = traversal.refine_leaves(tree, queries, leaf_idx, valid,
                                       use_kernel=cfg.use_kernel)
         r_counts = jax.lax.psum(
             jnp.sum(ref.counts * valid.astype(jnp.int32), -1), model_axis)
-        n_visited = jax.lax.psum(
-            jnp.sum(vis.astype(jnp.int32), -1), model_axis)   # [B]
+        n_visited = jax.lax.psum(n_vis_loc, model_axis)       # [B]
         n_true = jax.lax.psum(
             jnp.sum(((ref.counts > 0) & valid).astype(jnp.int32), -1),
             model_axis)
@@ -261,7 +247,8 @@ def make_serve_step(mesh, cfg: EngineConfig, *, kind: str,
             n_pred = jax.lax.psum(
                 jnp.sum(pred_loc.astype(jnp.int32), -1), model_axis)
             trunc = jax.lax.psum(trunc.astype(jnp.int32), model_axis) > 0
-        p_idx, p_valid = traversal.compact_mask(pred_loc, cfg.max_pred)
+        p_idx, p_valid, p_cnt = traversal.compact_mask_counted(
+            pred_loc, cfg.max_pred)
         p_ref = traversal.refine_leaves(tree, queries, p_idx, p_valid,
                                         use_kernel=cfg.use_kernel)
         ai_counts = jax.lax.psum(
@@ -270,8 +257,7 @@ def make_serve_step(mesh, cfg: EngineConfig, *, kind: str,
         mis = jax.lax.psum(
             jnp.sum(((p_ref.counts == 0) & p_valid).astype(jnp.int32), -1),
             model_axis) > 0
-        over = traversal.overflowed(pred_loc, cfg.max_pred) | \
-            (n_pred > cfg.max_pred)
+        over = (p_cnt > cfg.max_pred) | (n_pred > cfg.max_pred)
         over = jax.lax.psum(over.astype(jnp.int32), model_axis) > 0
         fallback = empty | mis | cell_over | over | trunc
 

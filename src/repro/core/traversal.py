@@ -80,26 +80,42 @@ class RefineResult(NamedTuple):
     valid: jnp.ndarray       # [B, K] slot validity
 
 
+def compact_mask_counted(mask: jnp.ndarray, k: int
+                         ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """[B, L] bool → (indices [B, k] i32, valid [B, k] bool, count [B] i32).
+
+    Takes the first ``k`` set leaves per row (leaf-ID order). Sort-free:
+    the ``j``-th set bit's column is the first position where the row's
+    inclusive prefix count reaches ``j + 1``, i.e. a rowwise binary search
+    of ``1..k`` over the cumsum — O(B·(L + k·log L)), no sort and no
+    scatter (a rowwise scatter is equivalent but an order of magnitude
+    slower under XLA:CPU; see EXPERIMENTS.md). ``count`` is the row's
+    total set bits, so overflow (``count > k``) and validity come for free
+    from the same scan — callers no longer re-reduce the mask.
+
+    This is the canonical compaction scheme; the fused traversal kernel's
+    epilogue (``kernels.traverse_fused.traverse_compact_t``) implements the
+    identical rank semantics inside VMEM and is tested bit-identical.
+    """
+    m = mask.astype(jnp.int32)
+    cs = jnp.cumsum(m, axis=-1)                          # inclusive prefix
+    count = cs[:, -1]                                    # = sum, one pass
+    targets = jnp.arange(1, k + 1, dtype=jnp.int32)
+    idx = jax.vmap(
+        lambda c: jnp.searchsorted(c, targets, side="left"))(cs)
+    valid = jnp.arange(k, dtype=jnp.int32)[None, :] < count[:, None]
+    return jnp.where(valid, idx.astype(jnp.int32), 0), valid, count
+
+
 def compact_mask(mask: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
     """[B, L] bool → (indices [B, k] i32, valid [B, k] bool).
 
-    Takes the first ``k`` set leaves per row (leaf-ID order). Sort-free:
-    each set bit's output slot is its exclusive prefix count (cumsum), and a
-    rowwise scatter places the column index there — O(B·L) data movement
-    instead of ``top_k``'s sort-shaped O(B·L·log). Bits past the ``k``-th
-    land in a discarded spill slot; overflow is reported by the caller via
-    ``overflowed()`` and handled by the exact fallback path.
+    Thin wrapper over ``compact_mask_counted`` for callers that don't need
+    the per-row count; overflow is reported via ``overflowed()`` and
+    handled by the exact fallback path.
     """
-    B, L = mask.shape
-    m = mask.astype(jnp.int32)
-    rank = jnp.cumsum(m, axis=-1) - m                    # exclusive prefix
-    slot = jnp.where((m > 0) & (rank < k), rank, k)      # k = spill slot
-    cols = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None, :], (B, L))
-    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
-    idx = jnp.zeros((B, k + 1), jnp.int32).at[rows, slot].max(cols)[:, :k]
-    valid = jnp.arange(k, dtype=jnp.int32)[None, :] < \
-        jnp.sum(m, axis=-1)[:, None]
-    return jnp.where(valid, idx, 0), valid
+    idx, valid, _ = compact_mask_counted(mask, k)
+    return idx, valid
 
 
 def compact_mask_topk(mask: jnp.ndarray, k: int
@@ -138,6 +154,39 @@ def refine_leaves(tree: DeviceTree, queries: jnp.ndarray, leaf_idx: jnp.ndarray,
                         valid=valid)
 
 
+class CompactVisit(NamedTuple):
+    leaf_idx: jnp.ndarray    # [B, k] i32 — first k visited leaves, ID order
+    valid: jnp.ndarray       # [B, k] bool slot validity
+    n_visited: jnp.ndarray   # [B] i32 total visited leaves (may exceed k)
+    overflow: jnp.ndarray    # [B] bool — more than k leaves visited
+
+
+def visited_leaves_compact(tree: DeviceTree, queries: jnp.ndarray, k: int,
+                           use_kernel: bool = False,
+                           tile_b: Optional[int] = None,
+                           tile_l: Optional[int] = None) -> CompactVisit:
+    """Classical visited set, compacted: first ``k`` visited leaves per row.
+
+    With ``use_kernel`` this runs the fused traversal kernel's compaction
+    epilogue (``kernels.ops.traverse_compact``): the ``[B, L]`` visited
+    mask stays in VMEM and only the ``[B, k]`` slot table plus per-row
+    counts reach HBM — the serving-path form. Without it, the jnp oracle
+    materializes the mask and compacts it with the identical cumsum-rank
+    scheme. ``tile_b``/``tile_l`` override the kernel's tile choice
+    (testing/tuning only).
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        idx, valid, count = kops.traverse_compact(
+            queries, [lv.mbrs for lv in tree.levels],
+            [lv.parent for lv in tree.levels], k, tb=tile_b, tl=tile_l)
+    else:
+        mask = visited_leaf_mask_per_level(tree, queries, use_kernel=False)
+        idx, valid, count = compact_mask_counted(mask, k)
+    return CompactVisit(leaf_idx=idx, valid=valid, n_visited=count,
+                        overflow=count > k)
+
+
 class QueryResult(NamedTuple):
     visited: jnp.ndarray        # [B, L] bool — classical visited set
     true_leaves: jnp.ndarray    # [B, L] bool — leaves with qualifying points
@@ -160,20 +209,25 @@ def gather_result_ids(tree: DeviceTree, refine: RefineResult,
                       max_results: int) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Flatten qualifying entry ids to [B, max_results] (padded with -1).
 
-    Sort-free, same scheme as ``compact_mask``: prefix-count ranks pick the
-    first ``max_results`` qualifying entries in flat (leaf-slot, entry)
-    order; the spill slot absorbs everything past the bound.
+    Sort-free, same scheme as ``compact_mask``: the ``j``-th qualifying
+    entry's flat (leaf-slot, entry) position is a rowwise binary search of
+    ``j + 1`` over the inclusive prefix count; entries past the bound are
+    simply never searched for.
     """
     ids = tree.leaf_entry_ids[refine.leaf_idx]              # [B, K, M]
     B = ids.shape[0]
     flat_ids = ids.reshape(B, -1)
     flat_in = refine.inside.reshape(B, -1).astype(jnp.int32)
-    rank = jnp.cumsum(flat_in, axis=-1) - flat_in
-    slot = jnp.where((flat_in > 0) & (rank < max_results), rank, max_results)
+    cs = jnp.cumsum(flat_in, axis=-1)
+    targets = jnp.arange(1, max_results + 1, dtype=jnp.int32)
+    pos = jax.vmap(
+        lambda c: jnp.searchsorted(c, targets, side="left"))(cs)
     rows = jnp.arange(B, dtype=jnp.int32)[:, None]
-    out = jnp.full((B, max_results + 1), -1, jnp.int32).at[rows, slot].max(
-        jnp.where(flat_in > 0, flat_ids, -1))[:, :max_results]
-    trunc = jnp.sum(flat_in, axis=-1) > max_results
+    n_in = cs[:, -1]
+    valid = targets[None, :] <= n_in[:, None]
+    safe = jnp.minimum(pos, flat_ids.shape[-1] - 1).astype(jnp.int32)
+    out = jnp.where(valid, flat_ids[rows, safe], -1)
+    trunc = n_in > max_results
     return out, trunc
 
 
@@ -205,7 +259,7 @@ def range_query(tree: DeviceTree, queries: jnp.ndarray, *,
     """
     queries = queries.astype(jnp.float32)
     visited = visited_leaf_mask(tree, queries, use_kernel)   # [B, L]
-    leaf_idx, valid = compact_mask(visited, max_visited)
+    leaf_idx, valid, n_vis = compact_mask_counted(visited, max_visited)
     ref = refine_leaves(tree, queries, leaf_idx, valid, use_kernel)
     B, L = visited.shape
     true_rows = scatter_rows(
@@ -213,15 +267,65 @@ def range_query(tree: DeviceTree, queries: jnp.ndarray, *,
         (ref.counts > 0).astype(jnp.int32) * valid.astype(jnp.int32))
     true_leaves = true_rows > 0
     result_ids, trunc_r = gather_result_ids(tree, ref, max_results)
-    trunc_v = overflowed(visited, max_visited)
+    trunc_v = n_vis > max_visited
     return QueryResult(
         visited=visited,
         true_leaves=true_leaves,
-        n_visited=jnp.sum(visited.astype(jnp.int32), axis=-1),
+        n_visited=n_vis,
         n_true=jnp.sum(true_leaves.astype(jnp.int32), axis=-1),
         n_results=jnp.sum(ref.counts * valid.astype(jnp.int32), axis=-1),
         result_ids=result_ids,
         truncated=trunc_v | trunc_r,
+    )
+
+
+class CompactQueryResult(NamedTuple):
+    leaf_idx: jnp.ndarray       # [B, max_visited] i32 compacted visited set
+    valid: jnp.ndarray          # [B, max_visited] bool slot validity
+    n_visited: jnp.ndarray      # [B] i32
+    n_true: jnp.ndarray         # [B] i32
+    n_results: jnp.ndarray      # [B] i32 total qualifying points
+    result_ids: jnp.ndarray     # [B, max_results] i32, -1 padded
+    truncated: jnp.ndarray      # [B] bool — static bounds overflowed
+
+
+@functools.partial(jax.jit, static_argnames=("max_visited", "max_results",
+                                             "use_kernel", "tile_b",
+                                             "tile_l"))
+def range_query_compact(tree: DeviceTree, queries: jnp.ndarray, *,
+                        max_visited: int = 256, max_results: int = 512,
+                        use_kernel: bool = True,
+                        tile_b: Optional[int] = None,
+                        tile_l: Optional[int] = None) -> CompactQueryResult:
+    """Serving-path classical range query: traverse+compact → refine.
+
+    The ``range_query`` variant for the hot path: the traversal kernel's
+    compaction epilogue hands the first ``max_visited`` visited leaf ids
+    straight to the scalar-prefetch refine kernel, so the ``[B, L]``
+    visited mask never round-trips through HBM (and is absent from the
+    lowered HLO on the kernel path). Use ``range_query`` when the dense
+    visited/true masks themselves are needed — labels, α, training.
+
+    Per-field bit-identical to ``range_query`` (``n_visited``/``n_true``/
+    ``n_results``/``result_ids``/``truncated`` and the compacted slots).
+    """
+    queries = queries.astype(jnp.float32)
+    cv = visited_leaves_compact(tree, queries, max_visited,
+                                use_kernel=use_kernel,
+                                tile_b=tile_b, tile_l=tile_l)
+    ref = refine_leaves(tree, queries, cv.leaf_idx, cv.valid, use_kernel)
+    result_ids, trunc_r = gather_result_ids(tree, ref, max_results)
+    validi = cv.valid.astype(jnp.int32)
+    return CompactQueryResult(
+        leaf_idx=cv.leaf_idx,
+        valid=cv.valid,
+        n_visited=cv.n_visited,
+        # compacted slots hold distinct leaves, so the slot-level count is
+        # the leaf-level count — no [B, L] scatter needed
+        n_true=jnp.sum((ref.counts > 0).astype(jnp.int32) * validi, axis=-1),
+        n_results=jnp.sum(ref.counts * validi, axis=-1),
+        result_ids=result_ids,
+        truncated=cv.overflow | trunc_r,
     )
 
 

@@ -5,6 +5,19 @@ named in ``leaf_idx`` are pulled HBM→VMEM (via scalar-prefetch BlockSpec
 index maps); extraneous leaves generate **no memory traffic at all**. The
 per-entry containment test then runs on the VPU over the fetched tile.
 
+Two grid forms, one semantics:
+
+* ``fold_k=False`` (the TPU form): a ``(B, K)`` grid, one cell per
+  (query, leaf slot), each DMA-ing exactly one named ``[1, M]`` leaf tile.
+  That per-slot DMA *is* the paper's saving on hardware — but interpret
+  mode emulates every grid cell in sequence, so B·K cells cost seconds on
+  CPU for what is microseconds of VPU work.
+* ``fold_k=True`` (the interpret form): the grid folds away entirely — one
+  kernel invocation over the whole ``[B, K, M]`` slab, gathered at the XLA
+  level outside the kernel. Same outputs bit for bit; the gather trades
+  the targeted DMA for an O(B·K·M) HBM gather, which is exactly the right
+  trade when the "DMA" is an emulated memcpy anyway.
+
 Inputs (planar entry layout — see mbr_intersect.py for rationale):
   ``leaf_idx`` [B, K] i32   — leaves to refine per query (scalar-prefetched)
   ``queries``  [B, 4] f32
@@ -35,13 +48,46 @@ def _kernel(idx_ref, q_ref, valid_ref, ex_ref, ey_ref, o_ref):
     o_ref[0, 0, :] = ok & (valid_ref[0, 0] > 0)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _kernel_folded(q_ref, valid_ref, gx_ref, gy_ref, o_ref):
+    # whole-array blocks: q [B, 4]; valid [B, K]; gx/gy/o [B, K, M]
+    q = q_ref[:, :]
+    gx = gx_ref[:, :, :]
+    gy = gy_ref[:, :, :]
+    v = valid_ref[:, :]
+    x0 = q[:, 0][:, None, None]
+    y0 = q[:, 1][:, None, None]
+    x1 = q[:, 2][:, None, None]
+    y1 = q[:, 3][:, None, None]
+    ok = (gx >= x0) & (gx <= x1) & (gy >= y0) & (gy <= y1)
+    o_ref[:, :, :] = ok & (v[:, :, None] > 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "fold_k"))
 def leaf_refine(queries: jnp.ndarray, ex: jnp.ndarray, ey: jnp.ndarray,
                 leaf_idx: jnp.ndarray, valid: jnp.ndarray, *,
-                interpret: bool = False) -> jnp.ndarray:
-    """queries [B,4], ex/ey [L,M], leaf_idx [B,K], valid [B,K] → [B,K,M]."""
+                interpret: bool = False,
+                fold_k: bool | None = None) -> jnp.ndarray:
+    """queries [B,4], ex/ey [L,M], leaf_idx [B,K], valid [B,K] → [B,K,M].
+
+    ``fold_k`` defaults to ``interpret``: the (B, K) scalar-prefetch grid on
+    hardware, the folded (B,) grid when emulating. Both forms are
+    bit-identical (tested); pass ``fold_k`` explicitly to pin a form.
+    """
+    if fold_k is None:
+        fold_k = interpret
     B, K = leaf_idx.shape
     L, M = ex.shape
+    if fold_k:
+        gx = ex[leaf_idx]                       # [B, K, M] XLA-level gather
+        gy = ey[leaf_idx]
+        # Whole-array blocks, no grid: the emulated grid loop is pure
+        # overhead off-TPU, so the folded form runs the kernel body once.
+        return pl.pallas_call(
+            _kernel_folded,
+            out_shape=jax.ShapeDtypeStruct((B, K, M), jnp.bool_),
+            interpret=interpret,
+        )(queries.astype(jnp.float32), valid.astype(jnp.int32),
+          gx.astype(jnp.float32), gy.astype(jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, K),

@@ -64,6 +64,62 @@ def mbr_intersect(queries: jnp.ndarray, mbrs: jnp.ndarray,
 _NEVER_RECT = (float("inf"), float("inf"), float("-inf"), float("-inf"))
 
 
+def _fused_tiles(B: int, L: int, tb: int | None, tl: int | None
+                 ) -> tuple[int, int, bool]:
+    """Tile choice shared by the fused traversal entry points.
+
+    On TPU, DEF_TB×DEF_TL VMEM tiles (grid cells are nearly free and
+    pl.when early exit works per tile). In interpret mode fold everything
+    into one tile per query-block — emulated grid cells are not free, the
+    walk would rerun per leaf tile, and the interpret form early-exits on
+    SUB_TL subtiles *inside* the kernel instead.
+    """
+    interp = _interpret()
+    L128 = (max(128, L) + 127) // 128 * 128
+    if tb is None:
+        tb = min(1024 if interp else _traverse.DEF_TB,
+                 (max(8, B) + 7) // 8 * 8)
+    if tl is None:
+        tl = L128 if interp and L128 <= 8192 else \
+            min(_traverse.DEF_TL, L128)
+    return tb, tl, interp
+
+
+def _fused_operands(queries: jnp.ndarray, level_mbrs, level_parents,
+                    tb: int, tl: int):
+    """Pad + transpose tree levels to the planar kernel layout."""
+    never = jnp.asarray(_NEVER_RECT, jnp.float32)
+
+    def pad_level(mbrs, parent, mult):
+        n = mbrs.shape[0]
+        mp = _pad_to(mbrs.astype(jnp.float32), 0, mult, 0.0)
+        if mp.shape[0] != n:
+            mp = mp.at[n:].set(never)
+        pp = _pad_to(parent.astype(jnp.int32), 0, mult, 0)
+        return mp.T, pp[None, :]
+
+    qp = _pad_to(queries.astype(jnp.float32), 0, tb, 0.0)
+    int_mbrs_t, int_parents = [], []
+    for lvl in range(len(level_mbrs) - 1):
+        mt, pt = pad_level(level_mbrs[lvl], level_parents[lvl],
+                           _traverse.LANE)
+        int_mbrs_t.append(mt)
+        if lvl > 0:
+            int_parents.append(pt)
+    leaf_mt, leaf_pt = pad_level(level_mbrs[-1], level_parents[-1], tl)
+    return qp, tuple(int_mbrs_t), tuple(int_parents), leaf_mt, leaf_pt
+
+
+def _per_level_kernel_mask(queries: jnp.ndarray, level_mbrs,
+                           level_parents) -> jnp.ndarray:
+    """Kernel-accelerated per-level fallback (frontier masks round-trip
+    HBM, but each level's intersection still runs on the kernel)."""
+    mask = mbr_intersect(queries, level_mbrs[0])
+    for mbrs, parent in zip(level_mbrs[1:], level_parents[1:]):
+        mask = mask[:, parent] & mbr_intersect(queries, mbrs)
+    return mask
+
+
 def traverse_fused(queries: jnp.ndarray, level_mbrs, level_parents,
                    tb: int | None = None, tl: int | None = None
                    ) -> jnp.ndarray:
@@ -89,52 +145,68 @@ def traverse_fused(queries: jnp.ndarray, level_mbrs, level_parents,
     if n_levels == 1:
         return mbr_intersect(queries, level_mbrs[0])
 
-    # Tile choice: on TPU, DEF_TB×DEF_TL VMEM tiles (grid cells are nearly
-    # free and pl.when early exit works per tile). In interpret mode fold
-    # everything into one tile per query-block — emulated grid cells are
-    # not free, the walk would rerun per leaf tile, and the interpret form
-    # early-exits on SUB_TL subtiles *inside* the kernel instead.
-    interp = _interpret()
-    L128 = (max(128, L) + 127) // 128 * 128
-    if tb is None:
-        tb = min(1024 if interp else _traverse.DEF_TB,
-                 (max(8, B) + 7) // 8 * 8)
-    if tl is None:
-        tl = L128 if interp and L128 <= 8192 else \
-            min(_traverse.DEF_TL, L128)
-
+    tb, tl, interp = _fused_tiles(B, L, tb, tl)
     widths = [int(m.shape[0]) for m in level_mbrs[:-1]]
     padded = [n + (-n) % _traverse.LANE for n in widths]
     if _traverse.vmem_estimate(padded, tb, tl) > _traverse.VMEM_BUDGET:
-        # Kernel-accelerated per-level fallback (frontier masks round-trip
-        # HBM, but each level's intersection still runs on the kernel).
-        mask = mbr_intersect(queries, level_mbrs[0])
-        for mbrs, parent in zip(level_mbrs[1:], level_parents[1:]):
-            mask = mask[:, parent] & mbr_intersect(queries, mbrs)
-        return mask
-    never = jnp.asarray(_NEVER_RECT, jnp.float32)
-
-    def pad_level(mbrs, parent, mult):
-        n = mbrs.shape[0]
-        mp = _pad_to(mbrs.astype(jnp.float32), 0, mult, 0.0)
-        if mp.shape[0] != n:
-            mp = mp.at[n:].set(never)
-        pp = _pad_to(parent.astype(jnp.int32), 0, mult, 0)
-        return mp.T, pp[None, :]
-
-    qp = _pad_to(queries.astype(jnp.float32), 0, tb, 0.0)
-    int_mbrs_t, int_parents = [], []
-    for lvl in range(n_levels - 1):
-        mt, pt = pad_level(level_mbrs[lvl], level_parents[lvl],
-                           _traverse.LANE)
-        int_mbrs_t.append(mt)
-        if lvl > 0:
-            int_parents.append(pt)
-    leaf_mt, leaf_pt = pad_level(level_mbrs[-1], level_parents[-1], tl)
+        return _per_level_kernel_mask(queries, level_mbrs, level_parents)
+    qp, int_mbrs_t, int_parents, leaf_mt, leaf_pt = _fused_operands(
+        queries, level_mbrs, level_parents, tb, tl)
     out = _traverse.traverse_fused_t(
-        qp.T, tuple(int_mbrs_t), tuple(int_parents), leaf_mt, leaf_pt,
-        tb=tb, tl=tl, interpret=_interpret())
+        qp.T, int_mbrs_t, int_parents, leaf_mt, leaf_pt,
+        tb=tb, tl=tl, interpret=interp)
     return out[:B, :L]
+
+
+def traverse_compact(queries: jnp.ndarray, level_mbrs, level_parents,
+                     k: int, tb: int | None = None, tl: int | None = None
+                     ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused traversal + compaction: [B, 4] → ``(leaf_idx [B, k] i32,
+    valid [B, k] bool, count [B] i32)``.
+
+    Semantically ``compact_mask(traverse_fused(...), k)`` plus the per-row
+    visited count, but on the kernel path the ``[B, L]`` visited mask never
+    leaves VMEM: the traversal kernel's compaction epilogue ranks set
+    leaves by exclusive prefix count per leaf tile and scatters the first
+    ``k`` leaf ids (leaf-ID order) straight into the ``[B, K]`` slot table.
+    This is the serving-path entry point — training/labels keep the dense
+    ``traverse_fused`` mask.
+
+    The fallback ladder mirrors ``traverse_fused`` (jnp oracle when kernels
+    are off, one ``mbr_intersect`` for single-level trees, per-level kernel
+    loop when over the VMEM budget); the fallbacks compact the dense mask
+    with the jnp ``compact_mask`` scheme, so every path is bit-identical.
+    """
+    from repro.core.traversal import compact_mask_counted
+
+    n_levels = len(level_mbrs)
+    B = queries.shape[0]
+    if not kernels_enabled():
+        return compact_mask_counted(
+            ref.traverse_fused(queries, level_mbrs, level_parents), k)
+    if n_levels == 1:
+        return compact_mask_counted(
+            mbr_intersect(queries, level_mbrs[0]), k)
+
+    L = level_mbrs[-1].shape[0]
+    tb, tl, interp = _fused_tiles(B, L, tb, tl)
+    kp = k if interp else \
+        (k + _traverse.LANE - 1) // _traverse.LANE * _traverse.LANE
+    widths = [int(m.shape[0]) for m in level_mbrs[:-1]]
+    padded = [n + (-n) % _traverse.LANE for n in widths]
+    if _traverse.vmem_estimate_compact(padded, tb, tl, kp,
+                                       tpu_form=not interp) > \
+            _traverse.VMEM_BUDGET:
+        return compact_mask_counted(
+            _per_level_kernel_mask(queries, level_mbrs, level_parents), k)
+    qp, int_mbrs_t, int_parents, leaf_mt, leaf_pt = _fused_operands(
+        queries, level_mbrs, level_parents, tb, tl)
+    idx, cnt = _traverse.traverse_compact_t(
+        qp.T, int_mbrs_t, int_parents, leaf_mt, leaf_pt,
+        k=k, tb=tb, tl=tl, interpret=interp)
+    count = cnt[:B, 0]
+    valid = jnp.arange(k, dtype=jnp.int32)[None, :] < count[:, None]
+    return jnp.where(valid, idx[:B, :k], 0), valid, count
 
 
 def leaf_refine(queries: jnp.ndarray, leaf_entries: jnp.ndarray,

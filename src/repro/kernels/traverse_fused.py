@@ -23,7 +23,20 @@ full boolean frontier masks through HBM between launches. This kernel walks
   tile failed), so dead subtrees generate no VPU work — the paper's "skip
   extraneous node accesses", applied to the traversal itself.
 
-Only the final ``[B, L]`` visited-leaf mask is written out.
+Two epilogues share that walk:
+
+* ``traverse_fused_t`` writes the final ``[B, L]`` visited-leaf mask (the
+  labels/α/training form — downstream consumers need the dense mask).
+
+* ``traverse_compact_t`` never writes the mask at all: a compaction
+  epilogue ranks each query-tile's set leaves by exclusive prefix count
+  (the same cumsum-rank scheme as ``core.traversal.compact_mask``, with the
+  running per-row rank base carried across leaf tiles in the revisited
+  output block) and scatters the first ``k`` leaf ids into a ``[B, K]``
+  slot table plus a ``[B, 1]`` per-row count. The serving path feeds those
+  slots straight into the scalar-prefetch ``leaf_refine`` kernel, so the
+  ``[B, L]`` mask never round-trips through HBM between traversal and
+  refinement.
 
 Layout: rectangles arrive transposed/planar (``[4, N]``) as in
 ``mbr_intersect.py``; parent index rows are ``[1, N]`` int32. ``ops.py``
@@ -46,6 +59,10 @@ DEF_TB = 256    # query-tile (sublane axis)
 DEF_TL = 512    # leaf-tile (lane axis, multiple of 128)
 SUB_TL = 512    # interpret-form early-exit subtile within the leaf tile
 LANE = 128      # internal-level width quantum
+# Slot-chunk width for the TPU-form compaction epilogue: the rank-equality
+# scatter materializes a [TB, TL, COMPACT_KC] compare per chunk, so the
+# chunk width bounds that transient (counted by vmem_estimate_compact).
+COMPACT_KC = 8
 # VMEM budget (bytes) for the TPU-form kernel's resident working set —
 # frontier scratch, replicated internal-level operands, and the largest
 # one-hot expansion matrix. Real VMEM is ~16 MiB/core; leave headroom for
@@ -71,6 +88,27 @@ def vmem_estimate(int_widths_padded: Sequence[int], tb: int, tl: int) -> int:
                                      int_widths_padded[1:])]
     onehots.append(n_last * tl)
     est += max(onehots) * 4
+    return est
+
+
+def vmem_estimate_compact(int_widths_padded: Sequence[int], tb: int, tl: int,
+                          kp: int, tpu_form: bool = True) -> int:
+    """VMEM working-set bytes for the fused traversal+compaction kernel.
+
+    The walk terms match ``vmem_estimate``; the compaction epilogue swaps
+    the [tb, tl] mask output tile for the [tb, kp] slot table + [tb, 1]
+    count, and adds the largest epilogue transient. That transient is
+    form-dependent: the TPU form's chunked rank-equality scatter
+    materializes a [tb, tl, COMPACT_KC] compare, while the interpret form's
+    binary search only needs the [tb, tl] prefix-count — gating the
+    interpret run (whose ``tl`` is the whole folded leaf axis) on the TPU
+    chunk transient would spuriously push CPU runs onto the per-level
+    fallback.
+    """
+    est = vmem_estimate(int_widths_padded, tb, tl)
+    est -= tb * tl                          # no [tb, tl] bool output tile
+    est += tb * (kp + 1) * 4                # slot table + count accumulators
+    est += tb * tl * (COMPACT_KC if tpu_form else 1) * 4  # epilogue transient
     return est
 
 
@@ -108,8 +146,73 @@ def _expand_mxu(mask_f32, parent_row, n_prev):
     return jax.lax.dot(mask_f32, onehot, preferred_element_type=jnp.float32)
 
 
+def _walk_internal_tpu(q, int_m, int_p, frontier_ref, n_int: int):
+    """TPU-form internal walk: root→last internal level, one-hot MXU
+    expansion per level, final frontier written to the VMEM scratch."""
+    # Root level: plain intersection (no parent).
+    mask = _tile_intersect(q, int_m[0][:, :]).astype(jnp.float32)
+    for l in range(1, n_int):
+        alive = _expand_mxu(mask, int_p[l - 1][0, :],
+                            int_m[l - 1].shape[1])
+        hit = _tile_intersect(q, int_m[l][:, :])
+        mask = jnp.where((alive > 0.0) & hit, 1.0, 0.0)
+    frontier_ref[:, :] = mask
+
+
+def _leaf_mask_interp(q, int_m, int_p, lm_v, leaf_par, n_int: int,
+                      tb: int, tl: int):
+    """Interpret-form leaf mask as a *value* (no ref writes).
+
+    Same semantics as the TPU form, restructured for the emulated grid
+    loop, which materializes every intermediate and turns any ref-touching
+    ``pl.when`` into full-buffer functionalization copies:
+
+    * early exit runs as *value-level* ``lax.cond``s (branches return
+      values, touch no refs) — an outer cond over the whole tile, then one
+      per SUB-wide leaf subtile, each gated on a bounding box of the
+      subtile's leaf MBRs computed in-kernel, so dead subtrees skip their
+      intersection entirely;
+    * the internal walk runs inside the outer live branch — one
+      concatenated intersection over all internal levels, boolean masks end
+      to end, lane gathers instead of one-hot matmuls.
+    """
+
+    def subtile_hit(sm):
+        return jnp.any((q[0, :] <= jnp.max(sm[2, :]))
+                       & (jnp.min(sm[0, :]) <= q[2, :])
+                       & (q[1, :] <= jnp.max(sm[3, :]))
+                       & (jnp.min(sm[1, :]) <= q[3, :]))
+
+    def live():
+        int_all = jnp.concatenate([m[:, :] for m in int_m], axis=1)
+        hit_all = _tile_intersect(q, int_all)        # [TB, ΣN_l]
+        off = int_m[0].shape[1]
+        mask = hit_all[:, :off]
+        for l in range(1, n_int):
+            n = int_m[l].shape[1]
+            mask = mask[:, int_p[l - 1][0, :]] & \
+                hit_all[:, off:off + n]
+            off += n
+        outs = []
+        for s in range(0, tl, SUB_TL):
+            e = min(s + SUB_TL, tl)
+            sm = lm_v[:, s:e]
+            outs.append(jax.lax.cond(
+                subtile_hit(sm),
+                lambda sm=sm, s=s, e=e: mask[:, leaf_par[s:e]]
+                & _tile_intersect(q, sm),
+                lambda e=e, s=s: jnp.zeros((tb, e - s), jnp.bool_)))
+        return outs[0] if len(outs) == 1 else \
+            jnp.concatenate(outs, axis=1)
+
+    tile_live = subtile_hit(lm_v)     # O(TB·4) bbox check, reused by callers
+    mask = jax.lax.cond(tile_live, live,
+                        lambda: jnp.zeros((tb, tl), jnp.bool_))
+    return mask, tile_live
+
+
 def _make_kernel(n_int: int, tb: int, tl: int, tpu_form: bool):
-    """Build the kernel body for a tree with ``n_int`` internal levels.
+    """Build the mask-output kernel body for ``n_int`` internal levels.
 
     ``tpu_form=True`` is the hardware graph: one-hot-matmul expansion on the
     MXU, the internal walk run once per query-tile under ``pl.when(j == 0)``
@@ -117,11 +220,11 @@ def _make_kernel(n_int: int, tb: int, tl: int, tpu_form: bool):
     early exit so leaf tiles under a dead frontier skip the intersection
     (predication is ~free on TPU).
 
-    ``tpu_form=False`` is the branch-free interpret form: same semantics,
-    but gather-based expansion and unconditional writes — in interpret mode
-    every ``pl.when`` lowers to a ``lax.cond`` that functionalizes the
-    output/scratch refs (full-array copies per branch), so predication there
-    *costs* rather than saves. Tests validate both forms.
+    ``tpu_form=False`` is the branch-free interpret form: same semantics via
+    ``_leaf_mask_interp`` — in interpret mode every ``pl.when`` lowers to a
+    ``lax.cond`` that functionalizes the output/scratch refs (full-array
+    copies per branch), so predication there *costs* rather than saves.
+    Tests validate both forms.
     """
 
     def kernel(*refs):
@@ -140,14 +243,7 @@ def _make_kernel(n_int: int, tb: int, tl: int, tpu_form: bool):
 
             @pl.when(j == 0)
             def _walk_internal():
-                # Root level: plain intersection (no parent).
-                mask = _tile_intersect(q, int_m[0][:, :]).astype(jnp.float32)
-                for l in range(1, n_int):
-                    alive = _expand_mxu(mask, int_p[l - 1][0, :],
-                                        int_m[l - 1].shape[1])
-                    hit = _tile_intersect(q, int_m[l][:, :])
-                    mask = jnp.where((alive > 0.0) & hit, 1.0, 0.0)
-                frontier_ref[:, :] = mask
+                _walk_internal_tpu(q, int_m, int_p, frontier_ref, n_int)
 
             frontier = frontier_ref[:, :]                # [TB, N_last]
             alive = _expand_mxu(frontier, leaf_p[0, :], frontier.shape[1])
@@ -162,54 +258,133 @@ def _make_kernel(n_int: int, tb: int, tl: int, tpu_form: bool):
                 o_ref[:, :] = (alive > 0.0) & _tile_intersect(
                     q, leaf_m[:, :])
         else:
-            # Interpret form. Same semantics, restructured for the emulated
-            # grid loop, which materializes every intermediate and turns any
-            # ref-touching ``pl.when`` into full-buffer functionalization
-            # copies:
-            #   * the whole leaf axis is one grid tile; early exit runs as
-            #     *value-level* ``lax.cond``s (branches return values, touch
-            #     no refs) — an outer cond over the whole tile, then one per
-            #     SUB-wide leaf subtile, each gated on a bounding box of the
-            #     subtile's leaf MBRs computed in-kernel, so dead subtrees
-            #     skip their intersection entirely;
-            #   * the internal walk runs once per query tile, inside the
-            #     outer live branch — one concatenated intersection over all
-            #     internal levels, boolean masks end to end, lane gathers
-            #     instead of one-hot matmuls.
-            lm_v = leaf_m[:, :]
-            leaf_par = leaf_p[0, :]
+            o_ref[:, :] = _leaf_mask_interp(
+                q, int_m, int_p, leaf_m[:, :], leaf_p[0, :], n_int, tb,
+                tl)[0]
 
-            def subtile_hit(sm):
-                return jnp.any((q[0, :] <= jnp.max(sm[2, :]))
-                               & (jnp.min(sm[0, :]) <= q[2, :])
-                               & (q[1, :] <= jnp.max(sm[3, :]))
-                               & (jnp.min(sm[1, :]) <= q[3, :]))
+    return kernel
 
-            def live():
-                int_all = jnp.concatenate([m[:, :] for m in int_m], axis=1)
-                hit_all = _tile_intersect(q, int_all)        # [TB, ΣN_l]
-                off = int_m[0].shape[1]
-                mask = hit_all[:, :off]
-                for l in range(1, n_int):
-                    n = int_m[l].shape[1]
-                    mask = mask[:, int_p[l - 1][0, :]] & \
-                        hit_all[:, off:off + n]
-                    off += n
-                outs = []
-                for s in range(0, tl, SUB_TL):
-                    e = min(s + SUB_TL, tl)
-                    sm = lm_v[:, s:e]
-                    outs.append(jax.lax.cond(
-                        subtile_hit(sm),
-                        lambda sm=sm, s=s, e=e: mask[:, leaf_par[s:e]]
-                        & _tile_intersect(q, sm),
-                        lambda e=e, s=s: jnp.zeros((tb, e - s), jnp.bool_)))
-                return outs[0] if len(outs) == 1 else \
-                    jnp.concatenate(outs, axis=1)
 
-            o_ref[:, :] = jax.lax.cond(
-                subtile_hit(lm_v), live,
-                lambda: jnp.zeros((tb, tl), jnp.bool_))
+def _make_compact_kernel(n_int: int, tb: int, tl: int, kp: int, n_j: int,
+                         tpu_form: bool):
+    """Kernel body: fused traversal + compaction epilogue.
+
+    Instead of writing the ``[TB, TL]`` visited mask, each leaf tile ranks
+    its set leaves by exclusive prefix count — continued across tiles via a
+    running per-row total in the revisited ``[TB, 1]`` count block — and
+    scatters the global leaf ids of ranks ``< kp`` into the revisited
+    ``[TB, KP]`` slot block (leaf-ID order, exactly ``compact_mask``'s
+    cumsum-rank scheme). Both output blocks map to ``(i, 0)`` so they stay
+    VMEM-resident across the whole leaf-tile sweep of a query tile: the
+    mask never exists outside registers/VMEM.
+
+    ``tpu_form=True`` realizes the scatter as ``COMPACT_KC``-wide chunks of
+    rank-equality compares + lane-sum (ranks are unique per row, so sum ==
+    select — Mosaic vectorizes dense compare/reduce where it would not a
+    lane scatter); each chunk is ``pl.when``-guarded by the tile's
+    [min, max] rank range so a tile only touches the slot chunks it can
+    actually fill, and the whole epilogue is skipped for dead tiles.
+    ``tpu_form=False`` fills slots by value-level rowwise binary search of
+    each slot's rank over the tile's inclusive prefix count — the same
+    searchsorted scheme as ``compact_mask_counted``, unconditional value
+    ops (interpret mode functionalizes ref-touching conds).
+    """
+
+    def kernel(*refs):
+        q_ref = refs[0]
+        int_m = refs[1:1 + n_int]                       # [4, N_l] each
+        int_p = refs[1 + n_int:2 * n_int]               # [1, N_l], levels 1..
+        leaf_m = refs[2 * n_int]                        # [4, TL]
+        leaf_p = refs[2 * n_int + 1]                    # [1, TL]
+        idx_ref = refs[2 * n_int + 2]                   # [TB, KP] i32 (i, 0)
+        cnt_ref = refs[2 * n_int + 3]                   # [TB, 1] i32 (i, 0)
+        frontier_ref = refs[2 * n_int + 4]              # [TB, N_last] f32
+
+        q = q_ref[:, :]                                  # [4, TB]
+        j = pl.program_id(1)
+
+        if tpu_form:
+            col = j * tl + jax.lax.broadcasted_iota(jnp.int32, (tb, tl), 1)
+
+            @pl.when(j == 0)
+            def _init():
+                idx_ref[:, :] = jnp.zeros((tb, kp), jnp.int32)
+                cnt_ref[:, :] = jnp.zeros((tb, 1), jnp.int32)
+                _walk_internal_tpu(q, int_m, int_p, frontier_ref, n_int)
+
+            frontier = frontier_ref[:, :]                # [TB, N_last]
+            alive = _expand_mxu(frontier, leaf_p[0, :], frontier.shape[1])
+            any_live = jnp.max(alive) > 0.0
+
+            @pl.when(any_live)
+            def _live_tile():
+                mask = (alive > 0.0) & _tile_intersect(q, leaf_m[:, :])
+                m = mask.astype(jnp.int32)
+                base = cnt_ref[:, 0][:, None]            # [TB, 1]
+                rank = base + jnp.cumsum(m, axis=1) - m  # global exclusive
+                cnt_ref[:, 0] = base[:, 0] + jnp.sum(m, axis=1)
+                w = jnp.where(mask, col, 0)
+                sl = jnp.where(mask, rank, -1)           # -1 never matches
+                lo = jnp.min(base)                       # tile's rank range
+                hi = jnp.max(sl)
+                for s in range(0, kp, COMPACT_KC):
+                    @pl.when((lo < s + COMPACT_KC) & (hi >= s))
+                    def _chunk(s=s):
+                        kio = s + jax.lax.broadcasted_iota(
+                            jnp.int32, (tb, tl, COMPACT_KC), 2)
+                        hit = sl[:, :, None] == kio
+                        contrib = jnp.sum(
+                            jnp.where(hit, w[:, :, None], 0), axis=1)
+                        idx_ref[:, s:s + COMPACT_KC] = \
+                            idx_ref[:, s:s + COMPACT_KC] + contrib
+        else:
+            mask, tile_live = _leaf_mask_interp(
+                q, int_m, int_p, leaf_m[:, :], leaf_p[0, :], n_int, tb, tl)
+            if n_j == 1:
+                # Whole leaf axis in one tile (the usual interpret fold):
+                # no rank base to carry — the epilogue is exactly
+                # ``compact_mask_counted``, with a value-level early exit
+                # on the traversal's own bbox liveness (information the
+                # out-of-kernel compact never has; coarser than
+                # ``jnp.any(mask)`` but free — the any() reduction would
+                # itself scan the whole tile).
+                def live():
+                    m = mask.astype(jnp.int32)
+                    cs = jnp.cumsum(m, axis=1)
+                    targets = 1 + jax.lax.iota(jnp.int32, kp)
+                    pos = jax.vmap(lambda c: jnp.searchsorted(
+                        c, targets, side="left"))(cs)
+                    idx = jnp.where(targets[None, :] <= cs[:, -1][:, None],
+                                    pos.astype(jnp.int32), 0)
+                    return idx, cs[:, -1][:, None]
+
+                idx, cnt = jax.lax.cond(
+                    tile_live, live,
+                    lambda: (jnp.zeros((tb, kp), jnp.int32),
+                             jnp.zeros((tb, 1), jnp.int32)))
+                idx_ref[:, :] = idx
+                cnt_ref[:, :] = cnt
+            else:
+                m = mask.astype(jnp.int32)
+                # Output blocks are uninitialized before the first visit —
+                # mask the j==0 read at value level (no ref-touching cond).
+                prev_idx = jnp.where(j == 0, 0, idx_ref[:, :])
+                prev_cnt = jnp.where(j == 0, 0, cnt_ref[:, :])
+                base = prev_cnt[:, 0]                        # [TB]
+                cs = jnp.cumsum(m, axis=1)                   # [TB, TL]
+                # Rowwise binary search (compact_mask_counted's scheme):
+                # slot t - 1 holds the column whose inclusive prefix count
+                # first reaches t - base; slots filled by earlier tiles
+                # keep their value, later slots wait for a later tile.
+                targets = 1 + jax.lax.broadcasted_iota(
+                    jnp.int32, (tb, kp), 1)
+                rel = targets - base[:, None]                # [TB, KP]
+                pos = jax.vmap(lambda c, t: jnp.searchsorted(
+                    c, t, side="left"))(cs, rel)
+                newly = (rel >= 1) & (rel <= cs[:, -1][:, None])
+                idx_ref[:, :] = jnp.where(
+                    newly, j * tl + pos.astype(jnp.int32), prev_idx)
+                cnt_ref[:, :] = (base + cs[:, -1])[:, None]
 
     return kernel
 
@@ -266,6 +441,69 @@ def traverse_fused_t(q_t: jnp.ndarray,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((tb, tl), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, L), jnp.bool_),
+        scratch_shapes=[pltpu.VMEM((tb, n_last), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "tb", "tl", "interpret", "tpu_form"))
+def traverse_compact_t(q_t: jnp.ndarray,
+                       int_mbrs_t: Sequence[jnp.ndarray],
+                       int_parents: Sequence[jnp.ndarray],
+                       leaf_mbrs_t: jnp.ndarray,
+                       leaf_parent: jnp.ndarray, *,
+                       k: int,
+                       tb: int = DEF_TB, tl: int = DEF_TL,
+                       interpret: bool = False,
+                       tpu_form: bool | None = None
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Transposed-layout fused traversal + compaction entry point.
+
+    Operand layout and padding contract are identical to
+    ``traverse_fused_t``. Returns ``(leaf_idx [B, KP] i32, count [B, 1]
+    i32)`` with ``KP = k`` rounded up to ``LANE`` in the TPU form (lane
+    tiling) and exactly ``k`` in the interpret form: row ``b``'s first
+    ``min(count[b], KP)`` slots hold the ids of its visited leaves in
+    leaf-ID order (exactly ``compact_mask``'s cumsum-rank order); slots past
+    the count are 0. The ``[B, L]`` visited mask is never written — callers
+    slice ``[:, :k]``, derive validity from ``count``, and overflow as
+    ``count > k``.
+    """
+    if tpu_form is None:
+        tpu_form = not interpret
+    n_int = len(int_mbrs_t)
+    assert n_int >= 1 and len(int_parents) == n_int - 1
+    _, B = q_t.shape
+    _, L = leaf_mbrs_t.shape
+    assert B % tb == 0 and L % tl == 0, (B, L, tb, tl)
+    kp = (k + LANE - 1) // LANE * LANE if tpu_form else k
+    n_last = int_mbrs_t[-1].shape[1]
+    grid = (B // tb, L // tl)
+
+    rep = lambda shape: pl.BlockSpec(shape, lambda i, j: (0, 0))  # noqa: E731
+    in_specs = [pl.BlockSpec((4, tb), lambda i, j: (0, i))]
+    in_specs += [rep((4, m.shape[1])) for m in int_mbrs_t]
+    in_specs += [rep((1, p.shape[1])) for p in int_parents]
+    in_specs += [
+        pl.BlockSpec((4, tl), lambda i, j: (0, j)),
+        pl.BlockSpec((1, tl), lambda i, j: (0, j)),
+    ]
+
+    args = ([q_t.astype(jnp.float32)]
+            + [m.astype(jnp.float32) for m in int_mbrs_t]
+            + [p.astype(jnp.int32) for p in int_parents]
+            + [leaf_mbrs_t.astype(jnp.float32),
+               leaf_parent.astype(jnp.int32)])
+
+    return pl.pallas_call(
+        _make_compact_kernel(n_int, tb, tl, kp, L // tl, tpu_form=tpu_form),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((tb, kp), lambda i, j: (i, 0)),
+                   pl.BlockSpec((tb, 1), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, kp), jnp.int32),
+                   jax.ShapeDtypeStruct((B, 1), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((tb, n_last), jnp.float32)],
         interpret=interpret,
     )(*args)

@@ -74,6 +74,7 @@ def test_forward_smoke(arch):
     assert np.isfinite(float(loss))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", configs.ARCHS)
 def test_train_grad_smoke(arch):
     r = configs.reduced(configs.get_config(arch))
@@ -87,6 +88,7 @@ def test_train_grad_smoke(arch):
     assert float(jnp.abs(g["embed"]).sum()) > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", configs.ARCHS)
 def test_decode_matches_forward(arch):
     cfg = configs.get_config(arch)

@@ -50,6 +50,7 @@ def test_mbr_intersect_touching_counts():
     assert out.tolist() == [[True, False, True]]
 
 
+@pytest.mark.slow
 @settings(max_examples=30, deadline=None)
 @given(st.integers(1, 40), st.integers(1, 300), st.integers(0, 2**31 - 1))
 def test_mbr_intersect_property(B, N, seed):
@@ -80,6 +81,24 @@ def test_leaf_refine_shapes(B, K, L, M):
                           jnp.asarray(entries[..., 1]), jnp.asarray(idx),
                           jnp.asarray(valid))
     np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("B,K,L,M", [(1, 1, 1, 8), (9, 5, 40, 16),
+                                     (64, 16, 200, 32), (17, 64, 1000, 200)])
+def test_leaf_refine_grid_forms_bit_identical(B, K, L, M):
+    """The folded interpret form (whole-array block, XLA-level gather) and
+    the (B, K) scalar-prefetch TPU form must agree bit for bit."""
+    from repro.kernels import leaf_refine as lr
+    q = mk_rects(B)
+    entries = RNG.uniform(-1, 1, size=(L, M, 2)).astype(np.float32)
+    idx = RNG.integers(0, L, size=(B, K)).astype(np.int32)
+    valid = (RNG.uniform(size=(B, K)) > 0.3).astype(np.int32)
+    args = (jnp.asarray(q), jnp.asarray(entries[..., 0]),
+            jnp.asarray(entries[..., 1]), jnp.asarray(idx),
+            jnp.asarray(valid))
+    prefetch = lr.leaf_refine(*args, interpret=True, fold_k=False)
+    folded = lr.leaf_refine(*args, interpret=True, fold_k=True)
+    np.testing.assert_array_equal(np.asarray(prefetch), np.asarray(folded))
 
 
 def test_leaf_refine_inf_padding_never_matches():

@@ -79,6 +79,7 @@ def test_router_discriminates_by_overlap(system):
         np.asarray(r_hi.routed_high).mean()
 
 
+@pytest.mark.slow
 def test_distributed_engine_equivalence_subprocess(system):
     """shard_map engine == single-device hybrid, on 8 fake host devices."""
     script = os.path.join(REPO, "tests", "helpers", "engine_equiv.py")

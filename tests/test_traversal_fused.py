@@ -8,6 +8,7 @@ that are not tile multiples, all-dead frontiers, and overflow rows.
 """
 import numpy as np
 import pytest
+import jax
 import jax.numpy as jnp
 
 from repro.core import device_tree as dt, traversal
@@ -226,10 +227,189 @@ def test_range_query_kernel_path_matches_jnp():
     pts = rng.normal(size=(4000, 2))
     tree = RTree(max_entries=16).insert_all(pts)
     dtree = dt.flatten(tree)
-    q = jnp.asarray(mk_rects(64, rng, width=0.4))
+    q = jnp.asarray(mk_rects(41, rng, width=0.4))
     r_jnp = traversal.range_query(dtree, q, use_kernel=False)
     r_ker = traversal.range_query(dtree, q, use_kernel=True)
     for f in r_jnp._fields:
         np.testing.assert_array_equal(
             np.asarray(getattr(r_jnp, f)), np.asarray(getattr(r_ker, f)),
             err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# fused traversal + compaction epilogue (traverse_compact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("L,fanout,B,k", [
+    (37, 4, 7, 8),        # L, B far from tile multiples
+    (130, 3, 64, 16),     # deep tree, non-power-of-two everything
+    (512, 8, 33, 4),      # heavy overflow (k tiny)
+    (2048, 8, 256, 64),   # multi-query-tile
+    (1, 4, 5, 4),         # degenerate: root == single leaf
+])
+def test_traverse_compact_matches_oracle(L, fanout, B, k):
+    """ops.traverse_compact == compact_mask_counted(jnp oracle mask)."""
+    mbrs, parents = synth_levels(L, fanout)
+    q = jnp.asarray(mk_rects(B, width=0.4))
+    got = ops.traverse_compact(q, mbrs, parents, k)
+    exp = traversal.compact_mask_counted(
+        ref.traverse_fused(q, mbrs, parents), k)
+    for g, e, name in zip(got, exp, ("idx", "valid", "count")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(e),
+                                      err_msg=name)
+
+
+@pytest.mark.parametrize("tpu_form", [True, False])
+@pytest.mark.parametrize("L,fanout,B,tl,k", [
+    (2048, 8, 64, 512, 64),   # multi-leaf-tile: rank base carried across j
+    (300, 5, 16, 128, 16),
+])
+def test_traverse_compact_kernel_forms(L, fanout, B, tl, k, tpu_form):
+    """Both kernel forms of the compaction epilogue (chunked rank-equality
+    scatter on the TPU graph, rowwise binary search on the interpret graph)
+    against the jnp oracle, with the running rank base exercised across
+    multiple leaf tiles and dead rows mixed in."""
+    from repro.kernels import traverse_fused as tf
+    mbrs, parents = synth_levels(L, fanout)
+    q = jnp.asarray(np.concatenate([
+        mk_rects(B - 4, width=0.5),
+        np.tile(np.array([[90.0, 90.0, 91.0, 91.0]], np.float32), (4, 1)),
+    ]))
+    never = jnp.asarray([np.inf, np.inf, -np.inf, -np.inf], jnp.float32)
+
+    def pad_level(m, p, mult):
+        n = m.shape[0]
+        padn = (-n) % mult
+        if padn:
+            m = jnp.concatenate([m, jnp.tile(never[None], (padn, 1))])
+            p = jnp.concatenate([p, jnp.zeros((padn,), jnp.int32)])
+        return m.T.astype(jnp.float32), p[None, :].astype(jnp.int32)
+
+    int_m, int_p = [], []
+    for i in range(len(mbrs) - 1):
+        mt, pt = pad_level(mbrs[i], parents[i], tf.LANE)
+        int_m.append(mt)
+        if i > 0:
+            int_p.append(pt)
+    leaf_m, leaf_p = pad_level(mbrs[-1], parents[-1], tl)
+    tb = (B + 7) // 8 * 8
+    qp = jnp.concatenate(
+        [q, jnp.zeros((tb - B, 4), jnp.float32)]) if tb != B else q
+    idx, cnt = tf.traverse_compact_t(
+        qp.T, tuple(int_m), tuple(int_p), leaf_m, leaf_p,
+        k=k, tb=tb, tl=tl, interpret=True, tpu_form=tpu_form)
+    exp_i, exp_v, exp_c = traversal.compact_mask_counted(
+        ref.traverse_fused(q, mbrs, parents), k)
+    count = np.asarray(cnt)[:B, 0]
+    np.testing.assert_array_equal(count, np.asarray(exp_c))
+    valid = np.arange(k)[None, :] < count[:, None]
+    np.testing.assert_array_equal(
+        np.where(valid, np.asarray(idx)[:B, :k], 0), np.asarray(exp_i))
+    # contract: slots past the count are zero in both forms
+    assert (np.asarray(idx)[:B, :k][~valid] == 0).all()
+
+
+def test_traverse_compact_escape_hatch_and_vmem_gate(monkeypatch):
+    """Kernels-off and over-VMEM-budget fallbacks stay bit-identical."""
+    from repro.kernels import traverse_fused as tf
+    mbrs, parents = synth_levels(64, 4)
+    q = jnp.asarray(mk_rects(9))
+    exp = traversal.compact_mask_counted(
+        ref.traverse_fused(q, mbrs, parents), 8)
+
+    monkeypatch.setenv("REPRO_KERNELS", "off")
+    got_off = ops.traverse_compact(q, mbrs, parents, 8)
+    monkeypatch.delenv("REPRO_KERNELS")
+    real_budget = tf.VMEM_BUDGET
+    try:
+        tf.VMEM_BUDGET = 1
+        got_gate = ops.traverse_compact(q, mbrs, parents, 8)
+    finally:
+        tf.VMEM_BUDGET = real_budget
+    for got in (got_off, got_gate):
+        for g, e in zip(got, exp):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+
+
+def _workload_queries(rng, B):
+    """uniform / spatially clustered / all-dead query batches."""
+    lo = rng.uniform(-1, 1, (B, 2))
+    w = rng.uniform(0, 0.3, (B, 2))
+    uniform = np.concatenate([lo, lo + w], 1).astype(np.float32)
+    c = rng.uniform(-0.8, 0.6, (1, 2))
+    lo = c + rng.uniform(0, 0.15, (B, 2))
+    w = rng.uniform(0, 0.05, (B, 2))
+    clustered = np.concatenate([lo, lo + w], 1).astype(np.float32)
+    alldead = np.tile(np.array([[90.0, 90.0, 91.0, 91.0]], np.float32),
+                      (B, 1))
+    return {"uniform": uniform, "clustered": clustered, "alldead": alldead}
+
+
+@pytest.mark.parametrize("workload", ["uniform", "clustered", "alldead"])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_range_query_compact_matches_range_query(workload, use_kernel):
+    """The serving pipeline (fused traverse+compact → refine) is per-field
+    bit-identical to the full-mask range_query oracle."""
+    rng = np.random.default_rng(11)
+    pts = rng.normal(size=(3000, 2))
+    tree = RTree(max_entries=16).insert_all(pts)
+    dtree = dt.flatten(tree)
+    q = jnp.asarray(_workload_queries(rng, 48)[workload])
+    full = traversal.range_query(dtree, q, max_visited=64,
+                                 use_kernel=False)
+    comp = traversal.range_query_compact(dtree, q, max_visited=64,
+                                         use_kernel=use_kernel)
+    exp_i, exp_v, _ = traversal.compact_mask_counted(
+        jnp.asarray(np.asarray(full.visited)), 64)
+    np.testing.assert_array_equal(np.asarray(comp.leaf_idx),
+                                  np.asarray(exp_i))
+    np.testing.assert_array_equal(np.asarray(comp.valid), np.asarray(exp_v))
+    for f in ("n_visited", "n_true", "n_results", "result_ids", "truncated"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(comp, f)), np.asarray(getattr(full, f)),
+            err_msg=f"{workload}/{f}")
+
+
+def test_range_query_compact_never_materializes_mask():
+    """On the kernel path the lowered HLO must not contain any [B, L]- or
+    [B, L_pad]-shaped tensor: the visited mask exists only tile-by-tile
+    inside the kernel. (range_query, by contrast, does materialize it.)"""
+    import re
+    from repro.core.device_tree import DeviceTree, Level
+
+    rng = np.random.default_rng(0)
+    L, B = 1000, 256          # L_pad = 1024; tile_b = 128 < B
+    mbrs, parents = synth_levels(L, 4)
+    dtree = DeviceTree(
+        levels=tuple(Level(mbrs=m, parent=p)
+                     for m, p in zip(mbrs, parents)),
+        leaf_entries=jnp.zeros((L, 8, 2), jnp.float32),
+        leaf_entry_ids=jnp.zeros((L, 8), jnp.int32),
+        leaf_counts=jnp.zeros((L,), jnp.int32),
+        n_points=0, max_entries=4)
+    q = jnp.zeros((B, 4), jnp.float32)
+
+    def lowered(fn):
+        return jax.jit(lambda t, qq: fn(t, qq)).lower(dtree, q).as_text()
+
+    txt_c = lowered(lambda t, qq: traversal.range_query_compact(
+        t, qq, max_visited=64, use_kernel=True, tile_b=128))
+    txt_f = lowered(lambda t, qq: traversal.range_query(
+        t, qq, max_visited=64, use_kernel=True))
+    full_mask = re.compile(r"<256x(1000|1024)x")
+    assert not full_mask.search(txt_c), "compact path materialized the mask"
+    assert full_mask.search(txt_f), "oracle should materialize the mask"
+
+
+def test_visited_leaves_compact_oracle_matches_kernel():
+    """visited_leaves_compact: jnp path == kernel path on a real tree."""
+    rng = np.random.default_rng(3)
+    pts = rng.normal(size=(2000, 2))
+    tree = RTree(max_entries=16).insert_all(pts)
+    dtree = dt.flatten(tree)
+    q = jnp.asarray(mk_rects(23, rng, width=0.6))
+    a = traversal.visited_leaves_compact(dtree, q, 32, use_kernel=False)
+    b = traversal.visited_leaves_compact(dtree, q, 32, use_kernel=True)
+    for f in a._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
