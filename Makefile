@@ -1,7 +1,7 @@
 # Local equivalents of the CI gates (.github/workflows/ci.yml).
 PYTHONPATH := src
 
-.PHONY: test test-all smoke bench
+.PHONY: test test-all smoke bench bench-smoke autotune
 
 # Fast default: skips @pytest.mark.slow (subprocess + interpret-heavy
 # sweeps). `test-all` is the tier-1 / scheduled-CI full run.
@@ -14,5 +14,16 @@ test-all:
 smoke: test
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --quick --only engine_bench --json BENCH_engine.json
 
+# Toy-scale spatial-scheduler streaming benchmark; asserts sorted serving
+# is bit-identical to unsorted, so the serving loop can't silently rot.
+# Wired into the fast CI job.
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.engine_bench --smoke
+
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json BENCH_engine.json
+
+# Tile-size sweep for the fused traversal kernels; writes the cache that
+# kernels/ops.py consults (src/repro/kernels/autotune_cache.json).
+autotune:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.autotune

@@ -1,0 +1,163 @@
+"""Tile-size autotune sweep for the fused traversal kernels.
+
+``python -m benchmarks.autotune [--quick] [--out PATH] [--shapes B,L,F;...]``
+
+The hand-picked ``DEF_TB / DEF_TL / SUB_TL / COMPACT_KC`` constants in
+``kernels/traverse_fused.py`` are one point in a per-tree-shape trade
+space (ROADMAP "Autotuned tile sizes"). This harness sweeps the knobs that
+matter for the *current backend's* kernel form on synthetic STR-packed
+trees, scores each candidate on a uniform + clustered serving mix (the
+two workloads whose balance the tiles actually shift), and writes the
+winners to a JSON cache keyed by ``(form, B, L, height)``.
+``kernels/ops.py`` consults that cache on every fused dispatch — explicit
+caller overrides still win, untuned shapes fall back to the defaults, and
+a stale cache can only cost time, never correctness (every candidate is
+asserted bit-identical to the default-tile output before it is timed).
+
+Forms: in interpret mode (CPU container) the swept knobs are ``tb`` and
+``sub_tl`` (the leaf axis is folded into one tile, so ``tl`` is fixed and
+``kc`` unused); on real TPU they are ``tb``/``tl``/``kc``. Cache entries
+from one form never leak into the other — the form is part of the key.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels import traverse_fused as tf
+
+
+DEF_SHAPES = ((256, 2048, 4), (256, 4096, 8), (512, 2048, 4))
+
+
+def _med_time(fn, reps: int = 7) -> float:
+    jax.block_until_ready(fn())  # warm / compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _workloads(B: int, rng) -> list[jnp.ndarray]:
+    """Uniform + clustered query batches (engine_bench's serving mix)."""
+    lo = rng.uniform(-1, 1, (B, 2))
+    w = rng.uniform(0, 0.05, (B, 2))
+    uniform = jnp.asarray(np.concatenate([lo, lo + w], 1), jnp.float32)
+    c = rng.uniform(-0.8, 0.6, (1, 2))
+    lo = c + rng.uniform(0, 0.15, (B, 2))
+    w = rng.uniform(0, 0.02, (B, 2))
+    clustered = jnp.asarray(np.concatenate([lo, lo + w], 1), jnp.float32)
+    return [uniform, clustered]
+
+
+def _candidates(B: int, L: int, interp: bool, quick: bool):
+    """Knob grid for the current form; the default point is always included."""
+    L128 = (max(128, L) + 127) // 128 * 128
+    if interp:
+        tbs = [min(1024, (max(8, B) + 7) // 8 * 8)] + \
+            ([256] if not quick else [])
+        tls = [L128] if L128 <= 8192 else [min(tf.DEF_TL, L128)]
+        sub_tls = [128, 256, 512] if not quick else [256, 512]
+        kcs = [tf.COMPACT_KC]       # unused by the interpret epilogue
+    else:
+        tbs = [128, 256, 512]
+        tls = sorted({min(t, L128) for t in (256, 512, 1024)})
+        sub_tls = [tf.SUB_TL]       # unused by the TPU form
+        kcs = [4, 8, 16]
+    for tb, tl, sub_tl, kc in itertools.product(tbs, tls, sub_tls, kcs):
+        yield {"tb": tb, "tl": tl, "sub_tl": sub_tl, "kc": kc}
+
+
+def sweep_shape(B: int, L: int, fanout: int, k: int, quick: bool,
+                rows: list) -> tuple[str, dict]:
+    from repro.data.synth_tree import synth_levels
+
+    rng = np.random.default_rng(0)
+    mbrs, parents = synth_levels(L, fanout, rng, str_pack=True)
+    lm = [jnp.asarray(m) for m in mbrs]
+    lp = [jnp.asarray(p) for p in parents]
+    n_levels = len(lm)
+    interp = jax.default_backend() != "tpu"
+    qs = _workloads(B, rng)
+
+    def run(cand, q):
+        qp, int_m, int_p, leaf_m, leaf_p = ops._fused_operands(
+            q, lm, lp, cand["tb"], cand["tl"])
+        return tf.traverse_compact_t(
+            qp.T, int_m, int_p, leaf_m, leaf_p, k=k,
+            tb=cand["tb"], tl=cand["tl"], sub_tl=cand["sub_tl"],
+            kc=cand["kc"], interpret=interp)
+
+    default = {"tb": None, "tl": None, "sub_tl": tf.SUB_TL,
+               "kc": tf.COMPACT_KC}
+    dtb, dtl, _, _ = ops._fused_tiles(B, L, None, None)
+    default["tb"], default["tl"] = dtb, dtl
+    ref_out = [jax.tree.map(np.asarray, run(default, q)) for q in qs]
+
+    best, best_t, default_t = None, np.inf, None
+    for cand in _candidates(B, L, interp, quick):
+        # correctness gate: slots agree wherever valid, counts exactly
+        for q, (ri, rc) in zip(qs, ref_out):
+            ci, cc = jax.tree.map(np.asarray, run(cand, q))
+            np.testing.assert_array_equal(cc, rc)
+            np.testing.assert_array_equal(ci[:, :k], ri[:, :k])
+        t = sum(_med_time(lambda q=q: run(cand, q)) for q in qs)
+        if cand == default:
+            default_t = t
+        if t < best_t:
+            best, best_t = dict(cand), t
+    if default_t is None:
+        default_t = sum(_med_time(lambda q=q: run(default, q)) for q in qs)
+    key = tf.tune_key(B, L, n_levels, interp)
+    entry = dict(best, us=best_t * 1e6, default_us=default_t * 1e6)
+    rows.append((f"autotune_{key}_us", best_t * 1e6,
+                 f"default_us={default_t * 1e6:.0f},"
+                 f"tiles=tb{best['tb']}tl{best['tl']}"
+                 f"s{best['sub_tl']}kc{best['kc']}"))
+    return key, entry
+
+
+def main(argv=None) -> list:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default=tf.autotune_cache_path(),
+                   help="JSON cache path (merged, not overwritten)")
+    p.add_argument("--quick", action="store_true",
+                   help="smaller grid + first shape only")
+    p.add_argument("--shapes", default=None,
+                   help="semicolon list of B,L,fanout triples")
+    p.add_argument("--k", type=int, default=64,
+                   help="compaction bound used for timing")
+    args = p.parse_args(argv)
+
+    shapes = DEF_SHAPES[:1] if args.quick else DEF_SHAPES
+    if args.shapes:
+        shapes = tuple(tuple(int(x) for x in s.split(","))
+                       for s in args.shapes.split(";"))
+
+    rows: list = []
+    cache = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            cache = json.load(f)
+    for (B, L, fanout) in shapes:
+        key, entry = sweep_shape(B, L, fanout, args.k, args.quick, rows)
+        cache[key] = entry
+        print(f"{key}: {entry}")
+    with open(args.out, "w") as f:
+        json.dump(cache, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out} ({len(cache)} shapes)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

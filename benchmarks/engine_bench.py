@@ -194,6 +194,114 @@ def compaction_micro(rows: list, B: int = 256, L: int = 2048,
         rows.append((f"compact_mask_{wl}_{shape}_us", t_mask * 1e6, ""))
 
 
+def _sched_traffic(Q: int, kind: str, rng) -> np.ndarray:
+    """Serving traffic in *arrival* order: spatially mixed streams.
+
+    ``clustered``: queries draw from a handful of hotspots but arrive
+    interleaved (the realistic worst case the scheduler exists for —
+    every unsorted batch touches every hotspot). ``uniform``: small rects
+    everywhere.
+    """
+    if kind == "uniform":
+        lo = rng.uniform(-1, 1, (Q, 2))
+        w = rng.uniform(0, 0.05, (Q, 2))
+    else:
+        centers = rng.uniform(-0.9, 0.7, (16, 2))
+        which = rng.integers(0, centers.shape[0], Q)
+        lo = centers[which] + rng.normal(0, 0.01, (Q, 2))
+        w = rng.uniform(0, 0.005, (Q, 2))
+    q = np.concatenate([lo, lo + w], 1).astype(np.float32)
+    rng.shuffle(q)                      # arrival order ≠ spatial order
+    return q
+
+
+def scheduler_bench(rows: list, Q: int = 2048, batch: int = 256,
+                    L: int = 4096, fanout: int = 4, k: int = 64,
+                    check: bool = True) -> None:
+    """Spatial batch scheduler: full-stream serving, sorted vs unsorted.
+
+    The serve step per batch is the kernel-path compact pipeline
+    (``range_query_compact``), pinned to the **leaf-tile grid** form
+    (``tile_l = DEF_TL``) — the TPU-shaped graph whose ``pl.when`` tile
+    early exit is what batch locality feeds. (The interpret-mode default
+    folds the leaf axis into one tile, where only the per-subtile exit
+    remains and its savings drown in the replicated internal walk — see
+    EXPERIMENTS.md "Scheduler locality".) A Hilbert/Morton-ordered stream
+    hands the kernel batches whose queries share a compact region, so
+    most leaf tiles of most batches are dead before the intersection
+    runs. ``live_sub`` in the derived column is the measured fraction of
+    (batch × tile) pairs the early exit cannot skip — the locality the
+    sort manufactures. Also rows the scheduler's own admission cost (the
+    spatial_key kernel).
+    """
+    import functools
+
+    from repro.core.device_tree import DeviceTree, Level
+    from repro.core import schedule, traversal
+    from repro.kernels import ops
+    from repro.kernels import traverse_fused as tf
+
+    rng = np.random.default_rng(0)
+    mbrs, parents = _synth_levels(L, fanout, rng)
+    tree = DeviceTree(
+        levels=tuple(Level(mbrs=m, parent=p)
+                     for m, p in zip(mbrs, parents)),
+        leaf_entries=jnp.asarray(rng.uniform(-1, 1, (L, 8, 2)), jnp.float32),
+        leaf_entry_ids=jnp.zeros((L, 8), jnp.int32),
+        leaf_counts=jnp.full((L,), 8, jnp.int32),
+        n_points=0, max_entries=fanout)
+
+    tile_l = min(tf.DEF_TL, L)
+    serve_fn = functools.partial(traversal.range_query_compact, tree,
+                                 max_visited=k, max_results=64,
+                                 use_kernel=True, tile_l=tile_l)
+    leaf_mbrs = np.asarray(mbrs[-1])
+    sub = tile_l    # early-exit granularity of the gridded form
+    shape = f"Q{Q}B{batch}xL{L}"
+    for kind in ("clustered", "uniform"):
+        q = _sched_traffic(Q, kind, np.random.default_rng(1))
+        bbox = schedule.workload_bbox(q)
+        base = None
+        results = {}
+        for sort in ("none", "morton", "hilbert"):
+            run = lambda s=sort: schedule.serve_workload(
+                serve_fn, q, batch=batch, sort=s, bbox=bbox)
+            results[sort] = run()
+            t = _med_time(lambda: run(), reps=5)
+            # live subtiles per batch: what the early exit cannot skip
+            live = tot = 0
+            sched = schedule.make_schedule(q, batch, sort, bbox)
+            for chunk, _ in schedule.iter_batches(q, sched):
+                hit = np.asarray(ops.mbr_intersect(
+                    jnp.asarray(chunk), jnp.asarray(leaf_mbrs)))
+                nsub = -(-hit.shape[1] // sub)
+                for s in range(nsub):
+                    tot += 1
+                    live += bool(hit[:, s * sub:(s + 1) * sub].any())
+            extra = f"live_sub={live / tot:.2f}"
+            if sort == "none":
+                base = t
+            else:
+                extra += f",speedup_vs_none={base / t:.2f}x"
+            rows.append((f"sched_{sort}_{kind}_{shape}_us", t * 1e6, extra))
+        if check:
+            # the scheduler must be invisible in the results (and serve
+            # every query): sorted == unsorted, field for field
+            for sort in ("morton", "hilbert"):
+                for f in type(results["none"].stats)._fields:
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(results["none"].stats, f)),
+                        np.asarray(getattr(results[sort].stats, f)),
+                        err_msg=f"{kind}:{sort}:{f}")
+
+    q = jnp.asarray(_sched_traffic(Q, "uniform", np.random.default_rng(2)))
+    bbox = jnp.asarray(schedule.workload_bbox(np.asarray(q)))
+    for curve in ("hilbert", "morton"):
+        t = _med_time(lambda: ops.spatial_key(q, bbox=bbox, curve=curve))
+        rows.append((f"spatial_key_{curve}_Q{Q}_us", t * 1e6,
+                     f"{Q / t / 1e6:.2f}Mkeys/s"))
+
+
 def kernel_micro(rows: list) -> None:
     from repro.kernels import ops
     rng = np.random.default_rng(0)
@@ -239,11 +347,36 @@ def main(quick: bool = False) -> list:
                        batch=256 if quick else 512)
     traversal_micro(rows)
     compaction_micro(rows)
+    if not quick:
+        # the quick (CI fast-job) run skips this section: the same job
+        # already runs it via the dedicated `make bench-smoke` gate
+        scheduler_bench(rows)
     kernel_micro(rows)
     for name, val, extra in rows:
         print(f"{name},{val:.2f},{extra}")
     return rows
 
 
+def smoke() -> list:
+    """Toy-scale scheduler benchmark only (the ``make bench-smoke`` / CI
+    fast-job gate): exercises the full streaming loop — key kernel, sorted
+    batch formation, ragged tail, inverse permutation — and *asserts* the
+    sorted streams are bit-identical to unsorted, so the serving loop
+    cannot silently rot between full benchmark runs."""
+    rows: list = []
+    # Q deliberately not a multiple of batch: the gate must exercise the
+    # ragged tail's pad-and-drop path, not just full batches
+    scheduler_bench(rows, Q=400, batch=128, L=2048, check=True)
+    for name, val, extra in rows:
+        print(f"{name},{val:.2f},{extra}")
+    return rows
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--smoke", action="store_true",
+                   help="scheduler streaming benchmark only, toy scale")
+    a = p.parse_args()
+    smoke() if a.smoke else main(quick=a.quick)

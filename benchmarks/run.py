@@ -4,6 +4,9 @@ One section per paper artifact:
   paper_tables — Figures 7/8 + Tables III/IV (the reproduction)
   engine_bench — batched-serving throughput + kernel microbenches
   roofline     — summarizes the dry-run roofline terms if results exist
+  union_scaling — pmax vs topk score union over model shards (subprocess
+                  sweep with fake host devices; runs only when named via
+                  ``--only union_scaling``)
 
 Prints ``name,value,derived`` CSV lines per benchmark. With ``--json`` the
 same rows are also written as structured JSON (name → {value, derived}) so
@@ -77,6 +80,17 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
 
+    if args.only == "union_scaling":   # explicit-only: forks per shard count
+        from benchmarks import union_scaling
+        print("== union_scaling (pmax vs topk over model shards) ==")
+        try:
+            rows = union_scaling.main(
+                ["--shards", "1,2" if args.quick else "1,2,4,8"])
+            results["union_scaling"] = _rows_to_dict(rows or [])
+            sections.append("union_scaling")
+        except Exception:
+            traceback.print_exc()
+
     if want("roofline"):
         from benchmarks import roofline
         print("== roofline (from dry-run artifacts) ==")
@@ -88,8 +102,15 @@ def main() -> None:
             traceback.print_exc()
 
     if args.json:
+        doc = {}
+        try:    # merge: a partial run (--only) must not drop other sections
+            with open(args.json) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            pass
+        doc.update(results)
         with open(args.json, "w") as f:
-            json.dump(results, f, indent=2, default=str)
+            json.dump(doc, f, indent=2, default=str)
         print(f"wrote {args.json}")
 
     print(f"== done: {', '.join(sections)} ==")

@@ -62,7 +62,10 @@ class EngineConfig:
     #            all-gathered [B, shards·k] candidate lists. Exact whenever
     #            a query's true leaf set per shard ≤ k (guaranteed here by
     #            k = max_pred, since >max_pred predictions fall back anyway).
-    score_union: str = "pmax"
+    # Default "topk": O(B·shards·k) payload vs pmax's O(B·L_glob) table —
+    # 2-3.4× faster at every swept shard count and scaling away from pmax
+    # past 4 shards (benchmarks/union_scaling.py, union_* rows).
+    score_union: str = "topk"
 
 
 def pad_tree_for_sharding(h: HybridTree, n_shards: int) -> HybridTree:
@@ -147,130 +150,176 @@ class ServeStats(NamedTuple):
     #                             small for the common case)
 
 
+class RPathOut(NamedTuple):
+    """Per-query R-path stage output (collectives already reduced)."""
+    r_counts: jnp.ndarray    # [B] qualifying points via the classical path
+    n_visited: jnp.ndarray   # [B] classical visit count (global)
+    n_true: jnp.ndarray      # [B] true-leaf count (global)
+    r_truncated: jnp.ndarray  # [B] max_visited overflow on any shard
+
+
+class AIPathOut(NamedTuple):
+    """Per-query AI-path stage output (collectives already reduced)."""
+    ai_counts: jnp.ndarray   # [B] qualifying points via predicted leaves
+    n_pred: jnp.ndarray      # [B] predicted leaf accesses (global)
+    fallback: jnp.ndarray    # [B] prediction unusable → R answer
+
+
+def _r_path(h: HybridTree, queries: jnp.ndarray, cfg: EngineConfig,
+            model_axis: str) -> RPathOut:
+    """Classical stage over the local leaf shard.
+
+    Fused traverse+compact (with use_kernel, the [B, L_loc] visited
+    mask stays in VMEM; only the [B, max_visited] slots + counts
+    reach HBM — the jnp path materializes the mask but compacts with
+    the identical scheme). Internal levels are replicated, so the
+    traversal applies unchanged per shard: the local leaf level's
+    parent indices point into the replicated last internal level, and
+    the sharding pad's never-intersecting leaf MBRs stay dead
+    regardless of their parent slot. Single-level (root == leaf)
+    shards are handled downstream — the former engine-local loop
+    self-gathered the root mask there.
+    """
+    tree = h.tree
+    cv = traversal.visited_leaves_compact(
+        tree, queries, cfg.max_visited, use_kernel=cfg.use_kernel)
+    leaf_idx, valid = cv.leaf_idx, cv.valid
+    n_vis_loc, over_loc = cv.n_visited, cv.overflow
+    r_trunc = jax.lax.psum(over_loc.astype(jnp.int32), model_axis) > 0
+    ref = traversal.refine_leaves(tree, queries, leaf_idx, valid,
+                                  use_kernel=cfg.use_kernel)
+    r_counts = jax.lax.psum(
+        jnp.sum(ref.counts * valid.astype(jnp.int32), -1), model_axis)
+    n_visited = jax.lax.psum(n_vis_loc, model_axis)       # [B]
+    n_true = jax.lax.psum(
+        jnp.sum(((ref.counts > 0) & valid).astype(jnp.int32), -1),
+        model_axis)
+    return RPathOut(r_counts=r_counts, n_visited=n_visited, n_true=n_true,
+                    r_truncated=r_trunc)
+
+
+def _ai_path(h: HybridTree, queries: jnp.ndarray, cfg: EngineConfig,
+             kind: str, model_axis: str, n_model: int) -> AIPathOut:
+    """Learned stage: per-cell experts → score union → refine predicted.
+
+    ``n_model`` is the static model-axis size (``jax.lax.axis_size`` is
+    too new for the supported jax range).
+    """
+    tree = h.tree
+    B = queries.shape[0]
+    L_loc = tree.levels[-1].mbrs.shape[0]
+    midx = jax.lax.axis_index(model_axis)
+    # global cell ids per query; translate to local expert slots
+    cell_ids, cvalid, cell_over = cells_of_queries(
+        h.ait.grid, queries, cfg.max_cells)
+    C_loc = (h.ait.bank.feats.shape[0] if kind == "knn" else
+             (h.ait.bank.w1.shape[0] if kind == "mlp" else
+              h.ait.bank.feat_idx.shape[0]))
+    c0 = midx * C_loc
+    local = (cell_ids >= c0) & (cell_ids < c0 + C_loc) & cvalid
+    loc_ids = jnp.clip(cell_ids - c0, 0, C_loc - 1)
+    if kind == "knn":
+        from repro.core.classifiers.knn import cell_probs_for as probs_fn
+        probs = probs_fn(h.ait.bank, queries, loc_ids)
+    elif kind == "mlp":
+        from repro.core.classifiers.mlp import cell_logits_for
+        probs = jax.nn.sigmoid(
+            cell_logits_for(h.ait.bank, queries, loc_ids))
+    else:
+        from repro.core.classifiers.forest import cell_probs_for as pf
+        probs = pf(h.ait.bank, queries, loc_ids)
+    L_glob = L_loc * n_model
+    if cfg.score_union == "pmax":
+        # paper-faithful dense union: one pmax over the full score table
+        from repro.core.classifiers.mlp import global_scores
+        scores = global_scores(h.ait.bank, probs, local, loc_ids, L_glob)
+        scores = jax.lax.pmax(scores, model_axis)         # [B, L_glob]
+        pred = scores > cfg.threshold
+        pred_loc = jax.lax.dynamic_slice_in_dim(
+            pred, midx * L_loc, L_loc, 1)
+        n_pred = jnp.sum(pred.astype(jnp.int32), -1)      # replicated
+        trunc = jnp.zeros((B,), bool)
+    else:
+        # beyond-paper: compress each expert shard's predictions to its
+        # top-k (leaf id, score) pairs taken DIRECTLY from the per-slot
+        # cell outputs (no [B, L_glob] scatter table at all), then union
+        # the all-gathered candidate lists. Exact: any query whose
+        # per-shard candidate count exceeds k falls back (conservative
+        # on duplicate predictions from sibling cells — a fallback is
+        # never wrong, only slower).
+        k = cfg.max_pred
+        lm = h.ait.bank.label_map[loc_ids]                # [B, S, Cl]
+        lok = local[:, :, None] & h.ait.bank.lmask[loc_ids]
+        flat_p = jnp.where(lok, probs, 0.0).reshape(B, -1)
+        flat_i = jnp.where(lok, lm, 0).reshape(B, -1)
+        c_loc = jnp.sum((flat_p > cfg.threshold).astype(jnp.int32), -1)
+        trunc = c_loc > k
+        vals, slot = jax.lax.top_k(flat_p, k)             # [B, k]
+        rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+        ids = flat_i[rows, slot]                          # global leaf id
+        ag_v = jax.lax.all_gather(vals, model_axis, axis=1, tiled=True)
+        ag_i = jax.lax.all_gather(ids, model_axis, axis=1, tiled=True)
+        keep = (ag_v > cfg.threshold) & \
+            (ag_i >= midx * L_loc) & (ag_i < (midx + 1) * L_loc)
+        li = jnp.clip(ag_i - midx * L_loc, 0, L_loc - 1)
+        pred_loc = jnp.zeros((B, L_loc), jnp.int32).at[rows, li].max(
+            keep.astype(jnp.int32)) > 0
+        n_pred = jax.lax.psum(
+            jnp.sum(pred_loc.astype(jnp.int32), -1), model_axis)
+        trunc = jax.lax.psum(trunc.astype(jnp.int32), model_axis) > 0
+    p_idx, p_valid, p_cnt = traversal.compact_mask_counted(
+        pred_loc, cfg.max_pred)
+    p_ref = traversal.refine_leaves(tree, queries, p_idx, p_valid,
+                                    use_kernel=cfg.use_kernel)
+    ai_counts = jax.lax.psum(
+        jnp.sum(p_ref.counts * p_valid.astype(jnp.int32), -1), model_axis)
+    empty = n_pred == 0
+    mis = jax.lax.psum(
+        jnp.sum(((p_ref.counts == 0) & p_valid).astype(jnp.int32), -1),
+        model_axis) > 0
+    over = (p_cnt > cfg.max_pred) | (n_pred > cfg.max_pred)
+    over = jax.lax.psum(over.astype(jnp.int32), model_axis) > 0
+    fallback = empty | mis | cell_over | over | trunc
+    return AIPathOut(ai_counts=ai_counts, n_pred=n_pred, fallback=fallback)
+
+
+def _route_combine(h: HybridTree, queries: jnp.ndarray, rp: RPathOut,
+                   ap: AIPathOut) -> ServeStats:
+    """Router dispatch + paper cost accounting over the two stage outputs."""
+    from repro.core.classifiers.router import route_high
+    high = route_high(h.router, queries)
+    used_ai = high & ~ap.fallback
+    n_results = jnp.where(used_ai, ap.ai_counts, rp.r_counts)
+    leaf_accesses = jnp.where(
+        high, ap.n_pred + jnp.where(ap.fallback, rp.n_visited, 0),
+        rp.n_visited)
+    # overflow only matters when the R path supplied the answer: used_ai
+    # rows report exact AI-path stats (n_visited stays exact regardless —
+    # the compaction count is not truncated), so flagging them would send
+    # already-exact rows through the wide tier for bit-identical results
+    return ServeStats(n_results=n_results, leaf_accesses=leaf_accesses,
+                      routed_high=high, used_ai=used_ai,
+                      r_truncated=rp.r_truncated & ~used_ai)
+
+
 def make_serve_step(mesh, cfg: EngineConfig, *, kind: str,
                     batch_axes=("pod", "data"), model_axis: str = "model"):
     """Build the shard_map'd hybrid serve step for ``mesh``.
 
     Returned fn: ``(hybrid, queries [B,4]) → ServeStats`` with B split over
-    ``batch_axes`` and tree/experts split over ``model_axis``.
+    ``batch_axes`` and tree/experts split over ``model_axis``. The body is
+    a composition of the stage functions above — ``_r_path`` / ``_ai_path``
+    / ``_route_combine`` — so alternative drivers (the spatial batch
+    scheduler, the two-tier wide re-serve, future partial pipelines) can
+    restage them without re-deriving the collective layout.
     """
     batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    n_model = mesh.shape[model_axis]
 
     def body(h: HybridTree, queries):
-        tree = h.tree
-        B = queries.shape[0]
-        L_loc = tree.levels[-1].mbrs.shape[0]
-        midx = jax.lax.axis_index(model_axis)
-        n_model = mesh.shape[model_axis]  # static (jax.lax.axis_size is new)
-
-        # ---------------- R path (local leaf shard) ----------------
-        # Fused traverse+compact (with use_kernel, the [B, L_loc] visited
-        # mask stays in VMEM; only the [B, max_visited] slots + counts
-        # reach HBM — the jnp path materializes the mask but compacts with
-        # the identical scheme). Internal levels are replicated, so the
-        # traversal applies unchanged per shard: the local leaf level's
-        # parent indices point into the replicated last internal level, and
-        # the sharding pad's never-intersecting leaf MBRs stay dead
-        # regardless of their parent slot. Single-level (root == leaf)
-        # shards are handled downstream — the former engine-local loop
-        # self-gathered the root mask there.
-        cv = traversal.visited_leaves_compact(
-            tree, queries, cfg.max_visited, use_kernel=cfg.use_kernel)
-        leaf_idx, valid = cv.leaf_idx, cv.valid
-        n_vis_loc, over_loc = cv.n_visited, cv.overflow
-        r_trunc = jax.lax.psum(over_loc.astype(jnp.int32), model_axis) > 0
-        ref = traversal.refine_leaves(tree, queries, leaf_idx, valid,
-                                      use_kernel=cfg.use_kernel)
-        r_counts = jax.lax.psum(
-            jnp.sum(ref.counts * valid.astype(jnp.int32), -1), model_axis)
-        n_visited = jax.lax.psum(n_vis_loc, model_axis)       # [B]
-        n_true = jax.lax.psum(
-            jnp.sum(((ref.counts > 0) & valid).astype(jnp.int32), -1),
-            model_axis)
-
-        # ---------------- AI path ----------------
-        # global cell ids per query; translate to local expert slots
-        cell_ids, cvalid, cell_over = cells_of_queries(
-            h.ait.grid, queries, cfg.max_cells)
-        C_loc = (h.ait.bank.feats.shape[0] if kind == "knn" else
-                 (h.ait.bank.w1.shape[0] if kind == "mlp" else
-                  h.ait.bank.feat_idx.shape[0]))
-        c0 = midx * C_loc
-        local = (cell_ids >= c0) & (cell_ids < c0 + C_loc) & cvalid
-        loc_ids = jnp.clip(cell_ids - c0, 0, C_loc - 1)
-        if kind == "knn":
-            from repro.core.classifiers.knn import cell_probs_for as probs_fn
-            probs = probs_fn(h.ait.bank, queries, loc_ids)
-        elif kind == "mlp":
-            from repro.core.classifiers.mlp import cell_logits_for
-            probs = jax.nn.sigmoid(
-                cell_logits_for(h.ait.bank, queries, loc_ids))
-        else:
-            from repro.core.classifiers.forest import cell_probs_for as pf
-            probs = pf(h.ait.bank, queries, loc_ids)
-        L_glob = L_loc * n_model
-        if cfg.score_union == "pmax":
-            # paper-faithful dense union: one pmax over the full score table
-            from repro.core.classifiers.mlp import global_scores
-            scores = global_scores(h.ait.bank, probs, local, loc_ids, L_glob)
-            scores = jax.lax.pmax(scores, model_axis)         # [B, L_glob]
-            pred = scores > cfg.threshold
-            pred_loc = jax.lax.dynamic_slice_in_dim(
-                pred, midx * L_loc, L_loc, 1)
-            n_pred = jnp.sum(pred.astype(jnp.int32), -1)      # replicated
-            trunc = jnp.zeros((B,), bool)
-        else:
-            # beyond-paper: compress each expert shard's predictions to its
-            # top-k (leaf id, score) pairs taken DIRECTLY from the per-slot
-            # cell outputs (no [B, L_glob] scatter table at all), then union
-            # the all-gathered candidate lists. Exact: any query whose
-            # per-shard candidate count exceeds k falls back (conservative
-            # on duplicate predictions from sibling cells — a fallback is
-            # never wrong, only slower).
-            k = cfg.max_pred
-            lm = h.ait.bank.label_map[loc_ids]                # [B, S, Cl]
-            lok = local[:, :, None] & h.ait.bank.lmask[loc_ids]
-            flat_p = jnp.where(lok, probs, 0.0).reshape(B, -1)
-            flat_i = jnp.where(lok, lm, 0).reshape(B, -1)
-            c_loc = jnp.sum((flat_p > cfg.threshold).astype(jnp.int32), -1)
-            trunc = c_loc > k
-            vals, slot = jax.lax.top_k(flat_p, k)             # [B, k]
-            rows = jnp.arange(B, dtype=jnp.int32)[:, None]
-            ids = flat_i[rows, slot]                          # global leaf id
-            ag_v = jax.lax.all_gather(vals, model_axis, axis=1, tiled=True)
-            ag_i = jax.lax.all_gather(ids, model_axis, axis=1, tiled=True)
-            keep = (ag_v > cfg.threshold) & \
-                (ag_i >= midx * L_loc) & (ag_i < (midx + 1) * L_loc)
-            li = jnp.clip(ag_i - midx * L_loc, 0, L_loc - 1)
-            pred_loc = jnp.zeros((B, L_loc), jnp.int32).at[rows, li].max(
-                keep.astype(jnp.int32)) > 0
-            n_pred = jax.lax.psum(
-                jnp.sum(pred_loc.astype(jnp.int32), -1), model_axis)
-            trunc = jax.lax.psum(trunc.astype(jnp.int32), model_axis) > 0
-        p_idx, p_valid, p_cnt = traversal.compact_mask_counted(
-            pred_loc, cfg.max_pred)
-        p_ref = traversal.refine_leaves(tree, queries, p_idx, p_valid,
-                                        use_kernel=cfg.use_kernel)
-        ai_counts = jax.lax.psum(
-            jnp.sum(p_ref.counts * p_valid.astype(jnp.int32), -1), model_axis)
-        empty = n_pred == 0
-        mis = jax.lax.psum(
-            jnp.sum(((p_ref.counts == 0) & p_valid).astype(jnp.int32), -1),
-            model_axis) > 0
-        over = (p_cnt > cfg.max_pred) | (n_pred > cfg.max_pred)
-        over = jax.lax.psum(over.astype(jnp.int32), model_axis) > 0
-        fallback = empty | mis | cell_over | over | trunc
-
-        # ---------------- router + combine ----------------
-        from repro.core.classifiers.router import route_high
-        high = route_high(h.router, queries)
-        used_ai = high & ~fallback
-        n_results = jnp.where(used_ai, ai_counts, r_counts)
-        leaf_accesses = jnp.where(
-            high, n_pred + jnp.where(fallback, n_visited, 0), n_visited)
-        return ServeStats(n_results=n_results, leaf_accesses=leaf_accesses,
-                          routed_high=high, used_ai=used_ai,
-                          r_truncated=r_trunc)
+        rp = _r_path(h, queries, cfg, model_axis)
+        ap = _ai_path(h, queries, cfg, kind, model_axis, n_model)
+        return _route_combine(h, queries, rp, ap)
 
     baxes = batch_axes if len(batch_axes) > 1 else batch_axes[0]
     qspec = P(baxes, None)
@@ -287,6 +336,31 @@ def make_serve_step(mesh, cfg: EngineConfig, *, kind: str,
         return shard(h, queries)
 
     return serve_step
+
+
+def wide_config(cfg: EngineConfig, factor: int = 8) -> EngineConfig:
+    """The wide-bound tier's config: ``max_visited`` scaled by ``factor``."""
+    return dataclasses.replace(cfg, max_visited=cfg.max_visited * factor)
+
+
+def make_two_tier_steps(mesh, cfg: EngineConfig, *, kind: str,
+                        wide_factor: int = 8, batch_axes=("pod", "data"),
+                        model_axis: str = "model"):
+    """Narrow + wide serve steps realizing the ``r_truncated`` contract.
+
+    The narrow step keeps ``max_visited`` small for the common case;
+    queries that overflow it (``ServeStats.r_truncated`` — their
+    ``n_results`` undercounts) are collected by the scheduler
+    (``core.schedule.serve_workload``) and re-served through the wide
+    step, whose bound is ``wide_factor``× larger. Returns
+    ``(narrow_step, wide_step)``; both are ``(hybrid, queries) →
+    ServeStats`` closures over the same mesh layout.
+    """
+    narrow = make_serve_step(mesh, cfg, kind=kind, batch_axes=batch_axes,
+                             model_axis=model_axis)
+    wide = make_serve_step(mesh, wide_config(cfg, wide_factor), kind=kind,
+                           batch_axes=batch_axes, model_axis=model_axis)
+    return narrow, wide
 
 
 def tree_shardings_p(h: HybridTree, model_axis: str = "model"):

@@ -38,6 +38,9 @@ class HybridResult(NamedTuple):
     leaf_accesses: jnp.ndarray  # [B] paper cost unit (leaf I/Os)
     n_visited_r: jnp.ndarray    # [B] classical visit count (for α / reporting)
     n_true: jnp.ndarray         # [B] true leaf count
+    truncated: jnp.ndarray      # [B] R-path static bounds overflowed — the
+    #                             scheduler re-serves these on a wide-bound
+    #                             tier (mirrors ServeStats.r_truncated)
 
 
 @functools.partial(jax.jit, static_argnames=("max_visited", "max_results",
@@ -84,4 +87,7 @@ def hybrid_query(h: HybridTree, queries: jnp.ndarray, *,
         leaf_accesses=leaf_accesses,
         n_visited_r=r.n_visited,
         n_true=r.n_true,
+        # only flag rows the R path answered — used_ai rows are exact
+        # (AI-side truncation already forces fallback)
+        truncated=r.truncated & ~used_ai,
     )

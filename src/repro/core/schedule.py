@@ -1,0 +1,191 @@
+"""Spatial batch scheduler: Hilbert/Morton-ordered serving batches.
+
+The fused traversal kernel's tile-level early exit (and the compaction
+epilogue that inherits it) only pays off when a batch's queries are
+spatially clustered — real traffic arrives interleaved. This layer
+manufactures the locality: incoming queries are keyed on a space-filling
+curve (``kernels.ops.spatial_key``), sorted, cut into fixed-size batches
+(each batch then covers a compact region, so most leaf tiles are dead for
+the whole batch), and served; the inverse permutation restores submission
+order, so the caller sees results **bit-identical** to unsorted serving —
+the serve step is per-query (every ServeStats row depends only on its own
+query), so permuting the batch composition cannot change any row.
+
+The scheduler is also where the engine's two-tier contract lives:
+``ServeStats.r_truncated`` rows (R-path ``max_visited`` overflow — their
+``n_results`` undercounts) are collected across the whole stream and
+re-served on a wide-bound tier, instead of being the caller's problem.
+
+Everything here is host-side orchestration (numpy permutations around
+jit'd serve steps); the device-side work stays in the serve step itself.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+SORT_MODES = ("none", "morton", "hilbert")
+
+
+def workload_bbox(queries: np.ndarray) -> np.ndarray:
+    """[Q, 4] rects → [4] bounding box of the rect *centers*.
+
+    Keys must be computed against one shared frame or they are not
+    comparable across batches; the scheduler pins the workload's own
+    center extent.
+    """
+    c = (np.asarray(queries)[:, :2] + np.asarray(queries)[:, 2:]) / 2.0
+    return np.concatenate([c.min(axis=0), c.max(axis=0)]).astype(np.float32)
+
+
+def spatial_keys(queries: np.ndarray, sort: str,
+                 bbox: Optional[np.ndarray] = None) -> np.ndarray:
+    """[Q, 4] → [Q] i32 curve keys (zeros for ``sort="none"``)."""
+    if sort not in SORT_MODES:
+        raise ValueError(f"sort must be one of {SORT_MODES}, got {sort!r}")
+    q = np.asarray(queries, np.float32)
+    if sort == "none":
+        return np.zeros((q.shape[0],), np.int32)
+    from repro.kernels import ops
+    if bbox is None:
+        bbox = workload_bbox(q)
+    return np.asarray(ops.spatial_key(jnp.asarray(q),
+                                      bbox=jnp.asarray(bbox), curve=sort))
+
+
+class Schedule(NamedTuple):
+    """A batching plan over one query stream."""
+    order: np.ndarray    # [Q] i32 — stream position → submission index
+    inv: np.ndarray      # [Q] i32 — submission index → stream position
+    n_queries: int
+    batch: int
+    n_batches: int       # ceil(Q / batch); the tail batch is padded
+    sort: str
+
+
+def make_schedule(queries: np.ndarray, batch: int, sort: str = "hilbert",
+                  bbox: Optional[np.ndarray] = None) -> Schedule:
+    """Key-sorted batch formation. ``sort="none"`` keeps submission order.
+
+    The sort is stable, so equal keys (and the ``none`` mode) preserve
+    submission order — scheduling is always a pure permutation.
+    """
+    q = np.asarray(queries, np.float32)
+    n = q.shape[0]
+    if n == 0 or batch <= 0:
+        raise ValueError(f"need n_queries > 0 and batch > 0, got {n}/{batch}")
+    keys = spatial_keys(q, sort, bbox)
+    order = np.argsort(keys, kind="stable").astype(np.int32)
+    inv = np.empty_like(order)
+    inv[order] = np.arange(n, dtype=np.int32)
+    return Schedule(order=order, inv=inv, n_queries=n, batch=int(batch),
+                    n_batches=-(-n // int(batch)), sort=sort)
+
+
+def iter_batches(queries: np.ndarray, sched: Schedule
+                 ) -> Iterator[tuple[np.ndarray, int]]:
+    """Yield ``(q [batch, 4] f32, n_valid)`` per stream batch.
+
+    Every batch has the full static shape (one jit trace); the ragged tail
+    is padded by repeating its last valid query — a real rect, so the
+    padded rows are well-formed work whose stats are simply dropped.
+    """
+    q = np.asarray(queries, np.float32)[sched.order]
+    for b in range(sched.n_batches):
+        lo = b * sched.batch
+        chunk = q[lo:lo + sched.batch]
+        n_valid = chunk.shape[0]
+        if n_valid < sched.batch:
+            pad = np.repeat(chunk[-1:], sched.batch - n_valid, axis=0)
+            chunk = np.concatenate([chunk, pad], axis=0)
+        yield chunk, n_valid
+
+
+def _rows(tree, sel) -> "jax.tree":
+    """Apply a leading-axis selection to every array in a stats pytree."""
+    return jax.tree.map(lambda a: np.asarray(a)[sel], tree)
+
+
+def _merge_rows(narrow, wide, idx: np.ndarray):
+    """Replace ``narrow``'s rows at ``idx`` with ``wide``'s, field-wise.
+
+    The wide tier's static bounds are larger, so its slot-table fields
+    (compacted leaf ids, result ids, ...) can be wider than the narrow
+    tier's. Those are rank-prefix tables — the narrow width is a prefix
+    view of the wide one — so wide rows are sliced to the narrow field
+    shape: scalar stats (counts, flags) arrive corrected, payload tables
+    keep the narrow tier's static width.
+    """
+    merged = {}
+    for f in type(narrow)._fields:
+        a = np.asarray(getattr(narrow, f)).copy()
+        w = np.asarray(getattr(wide, f))
+        if w.shape[1:] != a.shape[1:]:
+            if any(ws < ns for ws, ns in zip(w.shape[1:], a.shape[1:])):
+                raise ValueError(
+                    f"wide tier field {f!r} narrower than narrow tier's: "
+                    f"{w.shape} vs {a.shape}")
+            w = w[(slice(None),) + tuple(slice(0, n) for n in a.shape[1:])]
+        a[idx] = w
+        merged[f] = a
+    return type(narrow)(**merged)
+
+
+class ServeReport(NamedTuple):
+    """Aggregate result of one scheduled stream."""
+    stats: object           # per-query stats pytree, submission order
+    n_queries: int
+    n_batches: int
+    n_reserved: int         # rows re-served on the wide tier
+    wide_batches: int
+    sort: str
+
+
+def serve_workload(serve_fn: Callable, queries: np.ndarray, *, batch: int,
+                   sort: str = "hilbert",
+                   bbox: Optional[np.ndarray] = None,
+                   wide_fn: Optional[Callable] = None,
+                   trunc_field: str = "r_truncated") -> ServeReport:
+    """Serve a full query stream through the spatial scheduler.
+
+    ``serve_fn``: ``[batch, 4] jnp → stats`` pytree of per-query arrays
+    (leading axis ``batch``) — e.g. an ``engine.make_serve_step`` closure
+    or a jit'd ``hybrid_query`` wrapper. Every query of ``queries`` is
+    served exactly once (ragged tails are padded, pad rows dropped) and
+    the returned stats are in submission order, bit-identical to serving
+    the same stream unsorted.
+
+    Two-tier re-serve: with ``wide_fn`` (same signature, wider bounds),
+    rows whose ``trunc_field`` is set are collected across the stream and
+    re-served through ``wide_fn``; their stats rows are replaced by the
+    wide tier's (slot-table fields sliced to the narrow tier's static
+    width — see ``_merge_rows``). ``trunc_field=None`` (or absent from
+    the stats) disables the second tier.
+    """
+    sched = make_schedule(queries, batch, sort, bbox)
+    outs = []
+    for chunk, n_valid in iter_batches(queries, sched):
+        stats = serve_fn(jnp.asarray(chunk))
+        outs.append(_rows(stats, np.s_[:n_valid]))
+    stream = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *outs)
+    result = _rows(stream, sched.inv)   # back to submission order
+
+    n_reserved = wide_batches = 0
+    if wide_fn is not None and trunc_field is not None \
+            and hasattr(result, trunc_field):
+        trunc = np.asarray(getattr(result, trunc_field)).astype(bool)
+        idx = np.flatnonzero(trunc)
+        n_reserved = int(idx.size)
+        if n_reserved:
+            wide = serve_workload(wide_fn, np.asarray(queries, np.float32)[idx],
+                                  batch=batch, sort=sort, bbox=bbox,
+                                  wide_fn=None, trunc_field=None)
+            wide_batches = wide.n_batches
+            result = _merge_rows(result, wide.stats, idx)
+    return ServeReport(stats=result, n_queries=sched.n_queries,
+                       n_batches=sched.n_batches, n_reserved=n_reserved,
+                       wide_batches=wide_batches, sort=sort)

@@ -21,6 +21,7 @@ from repro.kernels import mbr_intersect as _mbr
 from repro.kernels import leaf_refine as _refine
 from repro.kernels import forest_infer as _forest
 from repro.kernels import traverse_fused as _traverse
+from repro.kernels import spatial_key as _skey
 from repro.kernels import wkv6 as _wkv6
 
 
@@ -64,25 +65,34 @@ def mbr_intersect(queries: jnp.ndarray, mbrs: jnp.ndarray,
 _NEVER_RECT = (float("inf"), float("inf"), float("-inf"), float("-inf"))
 
 
-def _fused_tiles(B: int, L: int, tb: int | None, tl: int | None
-                 ) -> tuple[int, int, bool]:
+def _fused_tiles(B: int, L: int, tb: int | None, tl: int | None,
+                 n_levels: int | None = None
+                 ) -> tuple[int, int, bool, dict]:
     """Tile choice shared by the fused traversal entry points.
 
-    On TPU, DEF_TB×DEF_TL VMEM tiles (grid cells are nearly free and
-    pl.when early exit works per tile). In interpret mode fold everything
-    into one tile per query-block — emulated grid cells are not free, the
-    walk would rerun per leaf tile, and the interpret form early-exits on
-    SUB_TL subtiles *inside* the kernel instead.
+    Resolution order per knob: explicit caller override → autotune cache
+    entry for this exact (form, B, L, height) shape (see
+    ``traverse_fused.tuned_tiles`` / ``benchmarks/autotune.py``) →
+    hand-picked default. The defaults: on TPU, DEF_TB×DEF_TL VMEM tiles
+    (grid cells are nearly free and pl.when early exit works per tile); in
+    interpret mode fold everything into one tile per query-block —
+    emulated grid cells are not free, the walk would rerun per leaf tile,
+    and the interpret form early-exits on SUB_TL subtiles *inside* the
+    kernel instead. Also returns the cache entry so callers can thread the
+    epilogue knobs (``sub_tl``, ``kc``) through to the kernel.
     """
     interp = _interpret()
+    tune = _traverse.tuned_tiles(B, L, n_levels, interp) \
+        if n_levels is not None else {}
     L128 = (max(128, L) + 127) // 128 * 128
     if tb is None:
-        tb = min(1024 if interp else _traverse.DEF_TB,
-                 (max(8, B) + 7) // 8 * 8)
+        tb = tune.get("tb") or min(1024 if interp else _traverse.DEF_TB,
+                                   (max(8, B) + 7) // 8 * 8)
     if tl is None:
-        tl = L128 if interp and L128 <= 8192 else \
-            min(_traverse.DEF_TL, L128)
-    return tb, tl, interp
+        tl = tune.get("tl") or (
+            L128 if interp and L128 <= 8192 else
+            min(_traverse.DEF_TL, L128))
+    return tb, tl, interp, tune
 
 
 def _fused_operands(queries: jnp.ndarray, level_mbrs, level_parents,
@@ -145,7 +155,8 @@ def traverse_fused(queries: jnp.ndarray, level_mbrs, level_parents,
     if n_levels == 1:
         return mbr_intersect(queries, level_mbrs[0])
 
-    tb, tl, interp = _fused_tiles(B, L, tb, tl)
+    tb, tl, interp, tune = _fused_tiles(B, L, tb, tl, n_levels)
+    sub_tl = tune.get("sub_tl", _traverse.SUB_TL)
     widths = [int(m.shape[0]) for m in level_mbrs[:-1]]
     padded = [n + (-n) % _traverse.LANE for n in widths]
     if _traverse.vmem_estimate(padded, tb, tl) > _traverse.VMEM_BUDGET:
@@ -154,7 +165,7 @@ def traverse_fused(queries: jnp.ndarray, level_mbrs, level_parents,
         queries, level_mbrs, level_parents, tb, tl)
     out = _traverse.traverse_fused_t(
         qp.T, int_mbrs_t, int_parents, leaf_mt, leaf_pt,
-        tb=tb, tl=tl, interpret=interp)
+        tb=tb, tl=tl, sub_tl=sub_tl, interpret=interp)
     return out[:B, :L]
 
 
@@ -189,13 +200,15 @@ def traverse_compact(queries: jnp.ndarray, level_mbrs, level_parents,
             mbr_intersect(queries, level_mbrs[0]), k)
 
     L = level_mbrs[-1].shape[0]
-    tb, tl, interp = _fused_tiles(B, L, tb, tl)
+    tb, tl, interp, tune = _fused_tiles(B, L, tb, tl, n_levels)
+    sub_tl = tune.get("sub_tl", _traverse.SUB_TL)
+    kc = tune.get("kc", _traverse.COMPACT_KC)
     kp = k if interp else \
         (k + _traverse.LANE - 1) // _traverse.LANE * _traverse.LANE
     widths = [int(m.shape[0]) for m in level_mbrs[:-1]]
     padded = [n + (-n) % _traverse.LANE for n in widths]
     if _traverse.vmem_estimate_compact(padded, tb, tl, kp,
-                                       tpu_form=not interp) > \
+                                       tpu_form=not interp, kc=kc) > \
             _traverse.VMEM_BUDGET:
         return compact_mask_counted(
             _per_level_kernel_mask(queries, level_mbrs, level_parents), k)
@@ -203,10 +216,40 @@ def traverse_compact(queries: jnp.ndarray, level_mbrs, level_parents,
         queries, level_mbrs, level_parents, tb, tl)
     idx, cnt = _traverse.traverse_compact_t(
         qp.T, int_mbrs_t, int_parents, leaf_mt, leaf_pt,
-        k=k, tb=tb, tl=tl, interpret=interp)
+        k=k, tb=tb, tl=tl, sub_tl=sub_tl, kc=kc, interpret=interp)
     count = cnt[:B, 0]
     valid = jnp.arange(k, dtype=jnp.int32)[None, :] < count[:, None]
     return jnp.where(valid, idx[:B, :k], 0), valid, count
+
+
+def spatial_key(queries: jnp.ndarray, bbox: jnp.ndarray | None = None,
+                curve: str = "hilbert", order: int = _skey.DEF_ORDER,
+                tb: int | None = None) -> jnp.ndarray:
+    """Space-filling-curve keys for query rects: [B, 4] → [B] i32.
+
+    Rect centers are normalized by ``bbox`` ([4] xmin/ymin/xmax/ymax —
+    pass the *workload* bounding box so keys are comparable across
+    batches; defaults to the batch's own extent) and quantized to
+    ``order``-bit coordinates before the bit walk. ``curve`` is
+    ``"hilbert"`` (better locality) or ``"morton"`` (cheaper).
+    """
+    q = queries.astype(jnp.float32)
+    cx = (q[:, 0] + q[:, 2]) * 0.5
+    cy = (q[:, 1] + q[:, 3]) * 0.5
+    if bbox is None:
+        bbox = jnp.stack([jnp.min(cx), jnp.min(cy),
+                          jnp.max(cx), jnp.max(cy)])
+    bbox = jnp.asarray(bbox, jnp.float32)
+    span = jnp.maximum(bbox[2:] - bbox[:2], 1e-12)
+    cxy = (jnp.stack([cx, cy], axis=1) - bbox[None, :2]) / span[None, :]
+    if not kernels_enabled():
+        return ref.spatial_key(cxy, curve=curve, order=order)
+    B = queries.shape[0]
+    tb = tb or min(_skey.DEF_TB, (max(128, B) + 127) // 128 * 128)
+    cp = _pad_to(cxy, 0, tb, 0.0)
+    out = _skey.spatial_key_t(cp.T, curve=curve, order=order, tb=tb,
+                              interpret=_interpret())
+    return out[0, :B]
 
 
 def leaf_refine(queries: jnp.ndarray, leaf_entries: jnp.ndarray,

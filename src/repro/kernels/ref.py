@@ -34,6 +34,40 @@ def traverse_fused(queries: jnp.ndarray, level_mbrs, level_parents
     return mask
 
 
+def spatial_key(cxy: jnp.ndarray, curve: str = "hilbert",
+                order: int = 15) -> jnp.ndarray:
+    """Space-filling-curve keys: ``cxy`` [B, 2] f32 in [0, 1) → [B] i32.
+
+    Ground truth for ``kernels.spatial_key``: quantize each normalized
+    center to ``order``-bit integer coordinates, then either interleave
+    bits (``morton``, x high) or run the classic xy→d Hilbert walk with
+    quadrant rotations as selects (``hilbert``).
+    """
+    n = jnp.int32(1 << order)
+    q = jnp.clip((cxy.astype(jnp.float32) * n.astype(jnp.float32))
+                 .astype(jnp.int32), 0, n - 1)
+    x, y = q[:, 0], q[:, 1]
+    if curve == "morton":
+        key = jnp.zeros_like(x)
+        for i in range(order):
+            key = key | (((x >> i) & 1) << (2 * i + 1)) | (((y >> i) & 1)
+                                                           << (2 * i))
+        return key
+    d = jnp.zeros_like(x)
+    for i in range(order - 1, -1, -1):
+        s = 1 << i
+        rx = (x >> i) & 1
+        ry = (y >> i) & 1
+        d = d + s * s * ((3 * rx) ^ ry)
+        swap = ry == 0
+        flip = swap & (rx == 1)
+        fx = jnp.where(flip, s - 1 - x, x)
+        fy = jnp.where(flip, s - 1 - y, y)
+        x = jnp.where(swap, fy, fx)
+        y = jnp.where(swap, fx, fy)
+    return d
+
+
 def leaf_refine(queries: jnp.ndarray, ex: jnp.ndarray, ey: jnp.ndarray,
                 leaf_idx: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
     """queries [B,4], ex/ey [L,M], leaf_idx [B,K], valid [B,K] → [B,K,M]."""

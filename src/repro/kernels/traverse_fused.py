@@ -47,6 +47,8 @@ a padding rect can never intersect, so its mask lane is always dead.
 from __future__ import annotations
 
 import functools
+import json
+import os
 from typing import Sequence
 
 import jax
@@ -70,6 +72,59 @@ COMPACT_KC = 8
 # back to the level-by-level path when it exceeds this.
 VMEM_BUDGET = 8 * 1024 * 1024
 
+# ---------------------------------------------------------------------------
+# Autotune cache: the constants above are hand-picked fallbacks; a sweep
+# (``benchmarks/autotune.py``) measures real tree shapes and caches the
+# winning tiles per (form, B, L, height) key. ``ops.py`` consults the cache
+# before every fused dispatch and only then falls back to the defaults.
+# ---------------------------------------------------------------------------
+AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+DEF_AUTOTUNE_CACHE = os.path.join(os.path.dirname(__file__),
+                                  "autotune_cache.json")
+_TUNABLE_KEYS = ("tb", "tl", "sub_tl", "kc")
+
+
+def autotune_cache_path() -> str:
+    return os.environ.get(AUTOTUNE_CACHE_ENV, DEF_AUTOTUNE_CACHE)
+
+
+@functools.lru_cache(maxsize=8)
+def _load_autotune(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def tune_key(B: int, L: int, n_levels: int, interp: bool) -> str:
+    """Cache key for one dispatch shape (exact match, no interpolation)."""
+    return f"{'interp' if interp else 'tpu'}:B{B}:L{L}:H{n_levels}"
+
+
+def tuned_tiles(B: int, L: int, n_levels: int, interp: bool) -> dict:
+    """Cached tile choice for a shape: subset of {tb, tl, sub_tl, kc}.
+
+    Empty dict when the shape was never swept (or the cache is absent) —
+    callers then use the hand-picked defaults. Values are sanitized to the
+    kernels' alignment contracts so a stale or hand-edited cache can only
+    cost performance, never correctness.
+    """
+    ent = _load_autotune(autotune_cache_path()).get(
+        tune_key(B, L, n_levels, interp), {})
+    out = {}
+    for k in _TUNABLE_KEYS:
+        if k in ent:
+            v = int(ent[k])
+            if k == "tb":
+                v = max(8, v // 8 * 8)      # sublane multiple
+            if k in ("tl", "sub_tl"):
+                v = max(LANE, v // LANE * LANE)
+            if k == "kc" and (v < 1 or LANE % v != 0):
+                continue   # kc must divide the lane-padded slot width
+            out[k] = max(1, v)
+    return out
+
 
 def vmem_estimate(int_widths_padded: Sequence[int], tb: int, tl: int) -> int:
     """Rough VMEM working-set bytes for the fused kernel.
@@ -92,7 +147,8 @@ def vmem_estimate(int_widths_padded: Sequence[int], tb: int, tl: int) -> int:
 
 
 def vmem_estimate_compact(int_widths_padded: Sequence[int], tb: int, tl: int,
-                          kp: int, tpu_form: bool = True) -> int:
+                          kp: int, tpu_form: bool = True,
+                          kc: int = COMPACT_KC) -> int:
     """VMEM working-set bytes for the fused traversal+compaction kernel.
 
     The walk terms match ``vmem_estimate``; the compaction epilogue swaps
@@ -108,7 +164,7 @@ def vmem_estimate_compact(int_widths_padded: Sequence[int], tb: int, tl: int,
     est = vmem_estimate(int_widths_padded, tb, tl)
     est -= tb * tl                          # no [tb, tl] bool output tile
     est += tb * (kp + 1) * 4                # slot table + count accumulators
-    est += tb * tl * (COMPACT_KC if tpu_form else 1) * 4  # epilogue transient
+    est += tb * tl * (kc if tpu_form else 1) * 4  # epilogue transient
     return est
 
 
@@ -160,7 +216,7 @@ def _walk_internal_tpu(q, int_m, int_p, frontier_ref, n_int: int):
 
 
 def _leaf_mask_interp(q, int_m, int_p, lm_v, leaf_par, n_int: int,
-                      tb: int, tl: int):
+                      tb: int, tl: int, sub_tl: int = SUB_TL):
     """Interpret-form leaf mask as a *value* (no ref writes).
 
     Same semantics as the TPU form, restructured for the emulated grid
@@ -194,8 +250,8 @@ def _leaf_mask_interp(q, int_m, int_p, lm_v, leaf_par, n_int: int,
                 hit_all[:, off:off + n]
             off += n
         outs = []
-        for s in range(0, tl, SUB_TL):
-            e = min(s + SUB_TL, tl)
+        for s in range(0, tl, sub_tl):
+            e = min(s + sub_tl, tl)
             sm = lm_v[:, s:e]
             outs.append(jax.lax.cond(
                 subtile_hit(sm),
@@ -211,7 +267,8 @@ def _leaf_mask_interp(q, int_m, int_p, lm_v, leaf_par, n_int: int,
     return mask, tile_live
 
 
-def _make_kernel(n_int: int, tb: int, tl: int, tpu_form: bool):
+def _make_kernel(n_int: int, tb: int, tl: int, tpu_form: bool,
+                 sub_tl: int = SUB_TL):
     """Build the mask-output kernel body for ``n_int`` internal levels.
 
     ``tpu_form=True`` is the hardware graph: one-hot-matmul expansion on the
@@ -260,13 +317,14 @@ def _make_kernel(n_int: int, tb: int, tl: int, tpu_form: bool):
         else:
             o_ref[:, :] = _leaf_mask_interp(
                 q, int_m, int_p, leaf_m[:, :], leaf_p[0, :], n_int, tb,
-                tl)[0]
+                tl, sub_tl)[0]
 
     return kernel
 
 
 def _make_compact_kernel(n_int: int, tb: int, tl: int, kp: int, n_j: int,
-                         tpu_form: bool):
+                         tpu_form: bool, sub_tl: int = SUB_TL,
+                         kc: int = COMPACT_KC):
     """Kernel body: fused traversal + compaction epilogue.
 
     Instead of writing the ``[TB, TL]`` visited mask, each leaf tile ranks
@@ -327,19 +385,20 @@ def _make_compact_kernel(n_int: int, tb: int, tl: int, kp: int, n_j: int,
                 sl = jnp.where(mask, rank, -1)           # -1 never matches
                 lo = jnp.min(base)                       # tile's rank range
                 hi = jnp.max(sl)
-                for s in range(0, kp, COMPACT_KC):
-                    @pl.when((lo < s + COMPACT_KC) & (hi >= s))
+                for s in range(0, kp, kc):
+                    @pl.when((lo < s + kc) & (hi >= s))
                     def _chunk(s=s):
                         kio = s + jax.lax.broadcasted_iota(
-                            jnp.int32, (tb, tl, COMPACT_KC), 2)
+                            jnp.int32, (tb, tl, kc), 2)
                         hit = sl[:, :, None] == kio
                         contrib = jnp.sum(
                             jnp.where(hit, w[:, :, None], 0), axis=1)
-                        idx_ref[:, s:s + COMPACT_KC] = \
-                            idx_ref[:, s:s + COMPACT_KC] + contrib
+                        idx_ref[:, s:s + kc] = \
+                            idx_ref[:, s:s + kc] + contrib
         else:
             mask, tile_live = _leaf_mask_interp(
-                q, int_m, int_p, leaf_m[:, :], leaf_p[0, :], n_int, tb, tl)
+                q, int_m, int_p, leaf_m[:, :], leaf_p[0, :], n_int, tb, tl,
+                sub_tl)
             if n_j == 1:
                 # Whole leaf axis in one tile (the usual interpret fold):
                 # no rank base to carry — the epilogue is exactly
@@ -390,13 +449,15 @@ def _make_compact_kernel(n_int: int, tb: int, tl: int, kp: int, n_j: int,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("tb", "tl", "interpret", "tpu_form"))
+                   static_argnames=("tb", "tl", "sub_tl", "interpret",
+                                    "tpu_form"))
 def traverse_fused_t(q_t: jnp.ndarray,
                      int_mbrs_t: Sequence[jnp.ndarray],
                      int_parents: Sequence[jnp.ndarray],
                      leaf_mbrs_t: jnp.ndarray,
                      leaf_parent: jnp.ndarray, *,
                      tb: int = DEF_TB, tl: int = DEF_TL,
+                     sub_tl: int = SUB_TL,
                      interpret: bool = False,
                      tpu_form: bool | None = None) -> jnp.ndarray:
     """Transposed-layout entry point.
@@ -436,7 +497,7 @@ def traverse_fused_t(q_t: jnp.ndarray,
                leaf_parent.astype(jnp.int32)])
 
     return pl.pallas_call(
-        _make_kernel(n_int, tb, tl, tpu_form=tpu_form),
+        _make_kernel(n_int, tb, tl, tpu_form=tpu_form, sub_tl=sub_tl),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((tb, tl), lambda i, j: (i, j)),
@@ -447,7 +508,8 @@ def traverse_fused_t(q_t: jnp.ndarray,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "tb", "tl", "interpret", "tpu_form"))
+                   static_argnames=("k", "tb", "tl", "sub_tl", "kc",
+                                    "interpret", "tpu_form"))
 def traverse_compact_t(q_t: jnp.ndarray,
                        int_mbrs_t: Sequence[jnp.ndarray],
                        int_parents: Sequence[jnp.ndarray],
@@ -455,6 +517,7 @@ def traverse_compact_t(q_t: jnp.ndarray,
                        leaf_parent: jnp.ndarray, *,
                        k: int,
                        tb: int = DEF_TB, tl: int = DEF_TL,
+                       sub_tl: int = SUB_TL, kc: int = COMPACT_KC,
                        interpret: bool = False,
                        tpu_form: bool | None = None
                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -478,6 +541,7 @@ def traverse_compact_t(q_t: jnp.ndarray,
     _, L = leaf_mbrs_t.shape
     assert B % tb == 0 and L % tl == 0, (B, L, tb, tl)
     kp = (k + LANE - 1) // LANE * LANE if tpu_form else k
+    assert kp % kc == 0 or not tpu_form, (kp, kc)
     n_last = int_mbrs_t[-1].shape[1]
     grid = (B // tb, L // tl)
 
@@ -497,7 +561,8 @@ def traverse_compact_t(q_t: jnp.ndarray,
                leaf_parent.astype(jnp.int32)])
 
     return pl.pallas_call(
-        _make_compact_kernel(n_int, tb, tl, kp, L // tl, tpu_form=tpu_form),
+        _make_compact_kernel(n_int, tb, tl, kp, L // tl, tpu_form=tpu_form,
+                             sub_tl=sub_tl, kc=kc),
         grid=grid,
         in_specs=in_specs,
         out_specs=[pl.BlockSpec((tb, kp), lambda i, j: (i, 0)),

@@ -1,12 +1,17 @@
-"""Spatial serving driver: build an AI+R-tree and serve batched queries.
+"""Spatial serving driver: build an AI+R-tree and stream a full workload.
 
 ``python -m repro.launch.serve --points 120000 --queries 4096 [...]``
 
 End-to-end: synthesize (or load) the dataset → dynamic R-tree build →
-workload labelling → AI+R training (grid search + router) → batched hybrid
-serving loop with throughput/leaf-access stats. With >1 device, serving is
-dispatched through the shard_map engine (queries over 'data', tree/experts
-over 'model').
+workload labelling → AI+R training (grid search + router) → **streaming**
+hybrid serving of the *entire* query workload through the spatial batch
+scheduler (``core.schedule``): queries are Hilbert/Morton-sorted into
+fixed-size batches (``--sort none`` keeps arrival order), every query is
+served exactly once, results are restored to submission order, and rows
+that overflowed the narrow R-path bound are re-served on the wide tier.
+Reports aggregate stats over the whole stream plus an oracle check that no
+query was dropped. With >1 device, serving dispatches through the
+shard_map engine (queries over 'data', tree/experts over 'model').
 """
 from __future__ import annotations
 
@@ -17,11 +22,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build, device_tree as dt, engine, labels
+from repro.core import build, device_tree as dt, engine, labels, schedule
 from repro.core.hybrid import hybrid_query
 from repro.core.rtree import RTree
 from repro.launch import mesh as pmesh
 from repro.data import synth
+
+
+def make_serve_fns(hyb, args, devices):
+    """(narrow_fn, wide_fn, trunc_field, ctx) for the streaming loop.
+
+    Distributed (>1 device and ``--distributed``): the shard_map engine's
+    two-tier steps (overflow flag ``ServeStats.r_truncated``). Otherwise:
+    jit'd ``hybrid_query`` with the same narrow/wide bound split (flag
+    ``HybridResult.truncated``; the wide tier also widens ``max_results``
+    so its result-id gather cannot re-truncate).
+    """
+    if args.distributed and len(devices) > 1:
+        n = len(devices)
+        nd = max(1, n // 2)
+        mesh = jax.make_mesh((nd, n // nd), ("data", "model"))
+        hyb_s = engine.pad_tree_for_sharding(hyb, n // nd)
+        cfg = engine.EngineConfig(max_visited=args.max_visited)
+        narrow, wide = engine.make_two_tier_steps(
+            mesh, cfg, kind=args.classifier, wide_factor=args.wide_factor)
+        ctx = pmesh.set_mesh(mesh)
+        # jit once per tier — the stream re-enters the step per batch
+        return (jax.jit(lambda q: narrow(hyb_s, q)),
+                jax.jit(lambda q: wide(hyb_s, q)), "r_truncated", ctx)
+
+    import contextlib
+    mv, mr = args.max_visited, 512
+    narrow = jax.jit(lambda q: hybrid_query(hyb, q, max_visited=mv,
+                                            max_results=mr))
+    wide = jax.jit(lambda q: hybrid_query(
+        hyb, q, max_visited=mv * args.wide_factor,
+        max_results=mr * args.wide_factor))
+    return narrow, wide, "truncated", contextlib.nullcontext()
 
 
 def main() -> None:
@@ -35,7 +72,14 @@ def main() -> None:
     p.add_argument("--classifier", default="knn",
                    choices=("knn", "forest", "mlp"))
     p.add_argument("--batch", type=int, default=512)
-    p.add_argument("--reps", type=int, default=3)
+    p.add_argument("--reps", type=int, default=3,
+                   help="timed repetitions of the full stream")
+    p.add_argument("--sort", default="hilbert", choices=schedule.SORT_MODES,
+                   help="spatial batch scheduling curve (none = arrival "
+                        "order)")
+    p.add_argument("--max-visited", type=int, default=64,
+                   help="narrow-tier R-path bound (overflow re-serves wide)")
+    p.add_argument("--wide-factor", type=int, default=8)
     p.add_argument("--distributed", action="store_true",
                    help="serve through the shard_map engine")
     args = p.parse_args()
@@ -61,37 +105,35 @@ def main() -> None:
           f"router test acc {rep.router.test_acc:.3f}, "
           f"models {rep.model_bytes/1e6:.2f} MB")
 
-    B = args.batch
-    q = jnp.asarray(wl.queries[:B])
-    if args.distributed and len(jax.devices()) > 1:
-        n = len(jax.devices())
-        nd = max(1, n // 2)
-        mesh = jax.make_mesh((nd, n // nd), ("data", "model"))
-        hyb_s = engine.pad_tree_for_sharding(hyb, n // nd)
-        step = engine.make_serve_step(mesh, engine.EngineConfig(),
-                                      kind=args.classifier)
-        with pmesh.set_mesh(mesh):
-            stats = step(hyb_s, q)
-            jax.block_until_ready(stats)
-            t0 = time.time()
-            for _ in range(args.reps):
-                stats = step(hyb_s, q)
-                jax.block_until_ready(stats)
-        dt_s = (time.time() - t0) / args.reps
-        acc = float(np.asarray(stats.leaf_accesses).mean())
-        ai = float(np.asarray(stats.used_ai).mean())
-    else:
-        out = hybrid_query(hyb, q)
-        jax.block_until_ready(out)
+    narrow_fn, wide_fn, trunc_field, ctx = make_serve_fns(
+        hyb, args, jax.devices())
+    bbox = schedule.workload_bbox(wl.queries)
+    with ctx:
+        # warm / compile both tiers, then time full-stream repetitions
+        report = schedule.serve_workload(
+            narrow_fn, wl.queries, batch=args.batch, sort=args.sort,
+            bbox=bbox, wide_fn=wide_fn, trunc_field=trunc_field)
         t0 = time.time()
         for _ in range(args.reps):
-            out = hybrid_query(hyb, q)
-            jax.block_until_ready(out)
+            report = schedule.serve_workload(
+                narrow_fn, wl.queries, batch=args.batch, sort=args.sort,
+                bbox=bbox, wide_fn=wide_fn, trunc_field=trunc_field)
         dt_s = (time.time() - t0) / args.reps
-        acc = float(np.asarray(out.leaf_accesses).mean())
-        ai = float(np.asarray(out.used_ai).mean())
-    print(f"# serve: {B/dt_s:.0f} queries/s, {acc:.2f} leaf accesses/query, "
+
+    st = report.stats
+    acc = float(np.asarray(st.leaf_accesses).mean())
+    ai = float(np.asarray(st.used_ai).mean())
+    resid = int(np.asarray(getattr(st, trunc_field)).sum())
+    print(f"# stream: {report.n_queries} queries in {report.n_batches} "
+          f"batches (sort={report.sort}), {report.n_reserved} re-served "
+          f"wide ({report.wide_batches} batches), {resid} still truncated")
+    print(f"# serve: {report.n_queries/dt_s:.0f} queries/s, "
+          f"{acc:.2f} leaf accesses/query, "
           f"{100*ai:.1f}% answered by the AI path")
+    # no-drop oracle: the labelling pass already executed every query
+    mism = int(np.sum(np.asarray(st.n_results) != wl.n_results))
+    print(f"# oracle: {mism} / {report.n_queries} n_results mismatches "
+          f"vs workload labels")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,253 @@
+"""Spatial batch scheduler: permutation identity + two-tier re-serve.
+
+The scheduler's whole contract is that it is *invisible* in the results:
+key-sorted serving must be a bit-identical permutation of unsorted serving
+(per-query results and counts), including ragged tails and the degenerate
+root == leaf tree, and the wide-tier re-serve must clear ``r_truncated``
+without touching non-overflow rows.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine, schedule, traversal
+from repro.core.device_tree import DeviceTree, Level
+from repro.kernels import ops, ref
+from tests.helpers.hypo import given, settings, st
+
+
+def _queries(n, seed=0, big_frac=0.0, span=2.0):
+    rng = np.random.default_rng(seed)
+    lo = rng.uniform(-1, 1, (n, 2))
+    w = rng.uniform(0, 0.1, (n, 2))
+    big = rng.uniform(size=n) < big_frac
+    w[big] = rng.uniform(0.5, span, (int(big.sum()), 2))
+    return np.concatenate([lo, lo + w], 1).astype(np.float32)
+
+
+def _tree(L=64, fanout=4, seed=0):
+    from repro.data.synth_tree import synth_levels
+    rng = np.random.default_rng(seed)
+    mbrs, parents = synth_levels(L, fanout, rng, str_pack=True)
+    entries = jnp.asarray(rng.uniform(-1, 1, (L, 8, 2)), jnp.float32)
+    return DeviceTree(
+        levels=tuple(Level(mbrs=jnp.asarray(m), parent=jnp.asarray(p))
+                     for m, p in zip(mbrs, parents)),
+        leaf_entries=entries,
+        leaf_entry_ids=jnp.arange(L * 8, dtype=jnp.int32).reshape(L, 8),
+        leaf_counts=jnp.full((L,), 8, jnp.int32),
+        n_points=L * 8, max_entries=fanout)
+
+
+def _single_level_tree(L=6, seed=5):
+    rng = np.random.default_rng(seed)
+    lo = rng.uniform(-1, 1, (L, 2))
+    w = rng.uniform(0.1, 0.5, (L, 2))
+    mbrs = jnp.asarray(np.concatenate([lo, lo + w], 1).astype(np.float32))
+    return DeviceTree(
+        levels=(Level(mbrs=mbrs, parent=jnp.zeros((L,), jnp.int32)),),
+        leaf_entries=jnp.asarray(
+            rng.uniform(-1, 1, (L, 8, 2)), jnp.float32),
+        leaf_entry_ids=jnp.arange(L * 8, dtype=jnp.int32).reshape(L, 8),
+        leaf_counts=jnp.full((L,), 8, jnp.int32),
+        n_points=L * 8, max_entries=8)
+
+
+# ---------------------------------------------------------------------------
+# spatial_key kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("curve", ["hilbert", "morton"])
+@pytest.mark.parametrize("n", [1, 7, 128, 333])
+def test_spatial_key_kernel_matches_ref(curve, n):
+    """ops.spatial_key (padded kernel dispatch) == jnp reference."""
+    q = jnp.asarray(_queries(n, seed=3))
+    bbox = jnp.asarray(schedule.workload_bbox(np.asarray(q)))
+    got = np.asarray(ops.spatial_key(q, bbox=bbox, curve=curve))
+    c = (q[:, :2] + q[:, 2:]) / 2
+    span = jnp.maximum(bbox[2:] - bbox[:2], 1e-12)
+    cxy = (c - bbox[None, :2]) / span[None, :]
+    exp = np.asarray(ref.spatial_key(cxy, curve=curve))
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_hilbert_sort_improves_locality():
+    """Sorted-adjacent query centers are much closer than arrival order —
+    the property the whole scheduling layer exists to manufacture."""
+    q = _queries(512, seed=1)
+    c = (q[:, :2] + q[:, 2:]) / 2
+    d_arrival = np.linalg.norm(np.diff(c, axis=0), axis=1).mean()
+    for curve in ("hilbert", "morton"):
+        sched = schedule.make_schedule(q, batch=64, sort=curve)
+        d_sorted = np.linalg.norm(
+            np.diff(c[sched.order], axis=0), axis=1).mean()
+        assert d_sorted < 0.5 * d_arrival, (curve, d_sorted, d_arrival)
+
+
+# ---------------------------------------------------------------------------
+# schedule formation
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 200), st.integers(1, 70), st.booleans())
+@settings(max_examples=25, deadline=None)
+def test_schedule_is_permutation(n, batch, hilbert):
+    q = _queries(n, seed=n)
+    sort = "hilbert" if hilbert else "morton"
+    sched = schedule.make_schedule(q, batch=batch, sort=sort)
+    assert sorted(sched.order.tolist()) == list(range(n))
+    np.testing.assert_array_equal(sched.order[sched.inv], np.arange(n))
+    assert sched.n_batches == -(-n // batch)
+    # batches tile the sorted stream exactly once, tail padded
+    seen = []
+    for chunk, n_valid in schedule.iter_batches(q, sched):
+        assert chunk.shape == (sched.batch, 4)
+        seen.append(chunk[:n_valid])
+    np.testing.assert_array_equal(np.concatenate(seen), q[sched.order])
+
+
+def test_sort_none_preserves_arrival_order():
+    q = _queries(37)
+    sched = schedule.make_schedule(q, batch=8, sort="none")
+    np.testing.assert_array_equal(sched.order, np.arange(37))
+
+
+# ---------------------------------------------------------------------------
+# sorted serving ≡ unsorted serving (bit-identical permutation)
+# ---------------------------------------------------------------------------
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _tree64():
+    return _tree(L=64)
+
+
+def _serve_fn(tree, k=8, max_results=32):
+    # range_query_compact is itself jit'd with static bounds, so reusing
+    # it across property examples hits the same trace cache
+    return lambda q: traversal.range_query_compact(
+        tree, q, max_visited=k, max_results=max_results, use_kernel=False)
+
+
+def _assert_same(a, b):
+    for f in type(a)._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+@given(st.integers(3, 90), st.integers(2, 40), st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_sorted_serving_bit_identical(n, batch, hilbert):
+    """Property: for any stream length / batch size (ragged tails
+    included), sorted serving returns exactly what unsorted serving
+    returns, row for row, field for field."""
+    tree = _tree64()
+    q = _queries(n, seed=n, big_frac=0.1)
+    fn = _serve_fn(tree)
+    sort = "hilbert" if hilbert else "morton"
+    base = schedule.serve_workload(fn, q, batch=batch, sort="none")
+    srt = schedule.serve_workload(fn, q, batch=batch, sort=sort)
+    _assert_same(base.stats, srt.stats)
+    # and the unsorted scheduled stream equals direct whole-batch serving
+    direct = jax.tree.map(np.asarray, fn(jnp.asarray(q[:batch])))
+    head = jax.tree.map(lambda a: np.asarray(a)[:batch], base.stats)
+    _assert_same(head, jax.tree.map(lambda a: a[:min(batch, n)], direct))
+
+
+def test_sorted_serving_single_level_tree():
+    """Degenerate root == leaf tree through the full scheduler path."""
+    tree = _single_level_tree()
+    q = _queries(23, seed=9, span=1.0, big_frac=0.3)
+    fn = _serve_fn(tree, k=4)
+    base = schedule.serve_workload(fn, q, batch=8, sort="none")
+    for sort in ("morton", "hilbert"):
+        srt = schedule.serve_workload(fn, q, batch=8, sort=sort)
+        _assert_same(base.stats, srt.stats)
+
+
+def test_stream_serves_every_query():
+    """No-drop oracle: aggregate n_results over the scheduled stream ==
+    unscheduled ground truth for every query (ragged tail included)."""
+    tree = _tree64()
+    q = _queries(71, seed=2)
+    oracle = traversal.range_query(tree, jnp.asarray(q), max_visited=64,
+                                   max_results=64, use_kernel=False)
+    rep = schedule.serve_workload(_serve_fn(tree, k=64, max_results=64), q,
+                                  batch=16, sort="hilbert")
+    assert rep.n_queries == 71 and rep.n_batches == 5
+    np.testing.assert_array_equal(np.asarray(rep.stats.n_results),
+                                  np.asarray(oracle.n_results))
+
+
+# ---------------------------------------------------------------------------
+# two-tier re-serve
+# ---------------------------------------------------------------------------
+
+def test_wide_tier_clears_truncation_without_touching_rest():
+    """Regression for the ServeStats.r_truncated contract (here at the
+    range_query_compact level: field ``truncated``): overflow rows get
+    exact wide-tier answers, non-overflow rows are byte-identical."""
+    tree = _tree64()
+    q = _queries(60, seed=4, big_frac=0.4)   # big rects overflow k=4
+    narrow = _serve_fn(tree, k=4, max_results=256)
+    wide = _serve_fn(tree, k=64, max_results=256)
+    rep_n = schedule.serve_workload(narrow, q, batch=16, sort="hilbert")
+    trunc = np.asarray(rep_n.stats.truncated)
+    assert trunc.any(), "fixture too weak: nothing overflowed"
+    assert not trunc.all(), "fixture too weak: everything overflowed"
+    rep = schedule.serve_workload(narrow, q, batch=16, sort="hilbert",
+                                  wide_fn=wide, trunc_field="truncated")
+    assert rep.n_reserved == int(trunc.sum())
+    assert not np.asarray(rep.stats.truncated).any()
+    # overflow rows now exact
+    oracle = traversal.range_query(tree, jnp.asarray(q), max_visited=64,
+                                   max_results=256, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(rep.stats.n_results),
+                                  np.asarray(oracle.n_results))
+    # non-overflow rows untouched by the merge
+    keep = ~trunc
+    for f in type(rep.stats)._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rep.stats, f))[keep],
+            np.asarray(getattr(rep_n.stats, f))[keep], err_msg=f)
+
+
+def test_engine_two_tier_clears_r_truncated():
+    """End-to-end ServeStats contract: make_two_tier_steps + scheduler.
+    The narrow tier's r_truncated rows are re-served wide; merged stats
+    carry exact counts everywhere and no residual truncation."""
+    from repro.core import build, device_tree as dt, labels
+    from repro.core.rtree import RTree
+    from repro.data import synth
+    from repro.launch import mesh as pmesh
+
+    pts = synth.tweets_like(3000, seed=0)
+    rtree = RTree(max_entries=16).insert_all(pts)
+    dtree = dt.flatten(rtree)
+    qs = synth.synth_queries(pts, 2e-3, 120, seed=1)
+    wl = labels.make_workload(dtree, qs)
+    hyb, _ = build.fit_airtree(dtree, wl, kind="knn", grid_sizes=(6,))
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    cfg = engine.EngineConfig(max_visited=4, max_pred=32)
+    narrow, wide = engine.make_two_tier_steps(mesh, cfg, kind="knn",
+                                              wide_factor=64)
+    with pmesh.set_mesh(mesh):
+        nf = jax.jit(lambda q: narrow(hyb, q))
+        wf = jax.jit(lambda q: wide(hyb, q))
+        rep_n = schedule.serve_workload(nf, wl.queries, batch=32,
+                                        sort="hilbert")
+        trunc = np.asarray(rep_n.stats.r_truncated)
+        assert trunc.any(), "fixture too weak: nothing overflowed"
+        rep = schedule.serve_workload(nf, wl.queries, batch=32,
+                                      sort="hilbert", wide_fn=wf)
+    assert rep.n_reserved == int(trunc.sum())
+    assert not np.asarray(rep.stats.r_truncated).any()
+    np.testing.assert_array_equal(np.asarray(rep.stats.n_results),
+                                  wl.n_results)
+    keep = ~trunc
+    for f in type(rep.stats)._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rep.stats, f))[keep],
+            np.asarray(getattr(rep_n.stats, f))[keep], err_msg=f)
