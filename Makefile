@@ -1,7 +1,7 @@
 # Local equivalents of the CI gates (.github/workflows/ci.yml).
 PYTHONPATH := src
 
-.PHONY: test test-all smoke bench bench-smoke autotune
+.PHONY: test test-all smoke bench bench-smoke examples-smoke autotune
 
 # Fast default: skips @pytest.mark.slow (subprocess + interpret-heavy
 # sweeps). `test-all` is the tier-1 / scheduled-CI full run.
@@ -19,6 +19,12 @@ smoke: test
 # Wired into the fast CI job.
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.engine_bench --smoke
+
+# Toy-scale run of both user-facing examples (they are living docs — the
+# fast CI job executes them so the documented API path can't silently rot).
+examples-smoke:
+	PYTHONPATH=$(PYTHONPATH) python examples/quickstart.py --points 4000 --queries 300
+	PYTHONPATH=$(PYTHONPATH) python examples/spatial_serve.py --points 4000 --batches 2 --batch-size 128 --train-queries 400
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json BENCH_engine.json

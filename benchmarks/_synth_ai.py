@@ -1,0 +1,35 @@
+"""Shared synthetic AI-tree fixtures for the benchmark/autotune harnesses.
+
+One construction of the random (untrained) MLP bank + grid so the
+autotune sweep tunes exactly the distribution the benchmark measures —
+they used to be two copies that could drift.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def synth_mlp_bank(rng, C: int, L: int, F: int = 4, H: int = 64,
+                   Cl: int = 32):
+    """Random MLPBank over ``C`` cells and ``L`` global leaves (10% of
+    label slots masked off; masked ``label_map`` entries are -1 pads)."""
+    from repro.core.classifiers.mlp import MLPBank
+    lm = rng.integers(0, L, (C, Cl)).astype(np.int32)
+    lmask = rng.uniform(size=(C, Cl)) < 0.9
+    lm[~lmask] = -1
+    return MLPBank(
+        w1=jnp.asarray(rng.normal(0, 1, (C, F, H)), jnp.float32),
+        b1=jnp.asarray(rng.normal(0, 1, (C, H)), jnp.float32),
+        w2=jnp.asarray(rng.normal(0, 1, (C, H, Cl)), jnp.float32),
+        b2=jnp.asarray(rng.normal(0, 0.5, (C, Cl)), jnp.float32),
+        mu=jnp.zeros((F,), jnp.float32),
+        sd=jnp.ones((F,), jnp.float32),
+        label_map=jnp.asarray(lm),
+        lmask=jnp.asarray(lmask))
+
+
+def unit_grid(g: int):
+    """g×g grid over the [-1, 1]² fixture query space."""
+    from repro.core.grid import Grid
+    return Grid(bbox=jnp.asarray([-1, -1, 1, 1], jnp.float32), g=g)

@@ -127,6 +127,73 @@ def sweep_shape(B: int, L: int, fanout: int, k: int, quick: bool,
     return key, entry
 
 
+def sweep_mlp_shape(B: int, L: int, g: int, Cl: int, k: int, quick: bool,
+                    rows: list) -> tuple[str, dict]:
+    """Knob sweep for the fused AI-path prediction kernel (``mlp_infer``).
+
+    Same protocol as the traversal sweep: every candidate is gated
+    bit-identical to the default-tile output on the serving mix before it
+    is timed; winners land under the ``mlp-`` form keys the
+    ``ops.mlp_predict_compact`` dispatch consults.
+    """
+    from repro.core.grid import cells_of_queries
+    from repro.kernels import mlp_infer as mi
+    from benchmarks._synth_ai import synth_mlp_bank, unit_grid
+
+    rng = np.random.default_rng(0)
+    C = g * g
+    bank = synth_mlp_bank(rng, C, L, Cl=Cl)
+    grid = unit_grid(g)
+    interp = jax.default_backend() != "tpu"
+    qs = _workloads(B, rng)
+    routed = [jax.jit(cells_of_queries, static_argnames="max_cells")(
+        grid, q, max_cells=4)[:2] for q in qs]
+
+    def run(cand, q, cid, ok):
+        return ops.mlp_predict_compact(
+            q, bank, cid, ok, n_leaves=L, k=k, threshold=0.5,
+            tb=cand["tb"], tl=cand["tl"])
+
+    Lp = (max(128, L) + 127) // 128 * 128
+    # the baseline must be what ops.mlp_predict_compact would actually
+    # dispatch today (same resolution path, like sweep_shape's use of
+    # _fused_tiles), not an arbitrary grid point — default_us documents
+    # the win over the current dispatch
+    dtb, dtl, _, _ = ops._mlp_tiles(B, L, C, Cl, interp)
+    default = {"tb": dtb, "tl": dtl}
+    if interp:
+        cands = [{"tb": tb, "tl": Lp}
+                 for tb in ([min(1024, B), 128] if not quick
+                            else [min(1024, B)])]
+    else:
+        cands = [{"tb": tb, "tl": tl}
+                 for tb in (128, 256, 512)
+                 for tl in sorted({min(t, Lp) for t in (256, 512, 1024)})]
+    if default not in cands:
+        cands.insert(0, default)
+    ref_out = [jax.tree.map(np.asarray, run(default, q, cid, ok))
+               for q, (cid, ok) in zip(qs, routed)]
+
+    best, best_t, default_t = None, np.inf, None
+    for cand in cands:
+        for (q, (cid, ok)), ro in zip(zip(qs, routed), ref_out):
+            co = jax.tree.map(np.asarray, run(cand, q, cid, ok))
+            for c, r in zip(co, ro):
+                np.testing.assert_array_equal(c, r)
+        t = sum(_med_time(lambda q=q, cid=cid, ok=ok: run(cand, q, cid, ok))
+                for q, (cid, ok) in zip(qs, routed))
+        if cand == default:
+            default_t = t
+        if t < best_t:
+            best, best_t = dict(cand), t
+    key = mi.tune_key_mlp(B, L, C, Cl, interp)
+    entry = dict(best, us=best_t * 1e6, default_us=default_t * 1e6)
+    rows.append((f"autotune_{key}_us", best_t * 1e6,
+                 f"default_us={default_t * 1e6:.0f},"
+                 f"tiles=tb{best['tb']}tl{best['tl']}"))
+    return key, entry
+
+
 def main(argv=None) -> list:
     p = argparse.ArgumentParser()
     p.add_argument("--out", default=tf.autotune_cache_path(),
@@ -153,6 +220,9 @@ def main(argv=None) -> list:
         key, entry = sweep_shape(B, L, fanout, args.k, args.quick, rows)
         cache[key] = entry
         print(f"{key}: {entry}")
+    key, entry = sweep_mlp_shape(256, 2048, 4, 32, args.k, args.quick, rows)
+    cache[key] = entry
+    print(f"{key}: {entry}")
     with open(args.out, "w") as f:
         json.dump(cache, f, indent=2, sort_keys=True)
     print(f"wrote {args.out} ({len(cache)} shapes)")

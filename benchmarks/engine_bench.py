@@ -66,6 +66,23 @@ def _med_time(fn, reps: int = 15) -> float:
     return float(np.median(ts))
 
 
+def _med_time_pair(fa, fb, reps: int = 25) -> tuple[float, float]:
+    """Interleaved medians of two competitors — back-to-back sampling
+    cancels the container's load drift, which otherwise dwarfs a closely
+    matched comparison measured in separate blocks."""
+    jax.block_until_ready(fa())
+    jax.block_until_ready(fb())
+    ta, tb_ = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fa())
+        t1 = time.perf_counter()
+        jax.block_until_ready(fb())
+        ta.append(t1 - t0)
+        tb_.append(time.perf_counter() - t1)
+    return float(np.median(ta)), float(np.median(tb_))
+
+
 def traversal_micro(rows: list, B: int = 256, L: int = 2048,
                     fanout: int = 4) -> None:
     """Fused single-pass traversal vs per-level kernel path vs jnp oracle.
@@ -192,6 +209,86 @@ def compaction_micro(rows: list, B: int = 256, L: int = 2048,
         rows.append((f"compact_fused_{wl}_{shape}_us", t_fused * 1e6,
                      f"speedup_vs_mask_compact={t_mask / t_fused:.2f}x"))
         rows.append((f"compact_mask_{wl}_{shape}_us", t_mask * 1e6, ""))
+
+
+def ai_fusion_micro(rows: list, B: int = 256, L: int = 2048, g: int = 4,
+                    Cl: int = 32, k: int = 64) -> None:
+    """Fused AI-path prediction vs the dense pipeline it replaces.
+
+    ``ai_dense_*`` is the pre-fusion serving form: gathered per-cell MLP
+    forward → sigmoid → ``global_scores`` max-union scatter into the
+    ``[B, L]`` score table → threshold → ``compact_mask_counted``.
+    ``ai_fused_*`` is ``ops.mlp_predict_compact`` — the same semantics in
+    one ``pallas_call`` whose only HBM output is the ``[B, k]`` slot
+    table + counts (the [B, L] table never materializes; bit-identity is
+    asserted before timing). Also rows the query-level pipelines
+    (``ai_query`` vs ``ai_query_compact``, refine + gather included).
+    Interpret mode on CPU — relative cost only; the derived column
+    carries the dense-table bytes the fused form stops moving.
+    """
+    from repro.core import traversal
+    from repro.core.aitree import (ai_query, ai_query_compact, make_aitree,
+                                   predict_compact, predict_scores)
+    from repro.core.device_tree import DeviceTree, Level
+    from benchmarks._synth_ai import synth_mlp_bank, unit_grid
+
+    rng = np.random.default_rng(0)
+    bank = synth_mlp_bank(rng, g * g, L, Cl=Cl)
+    C = g * g
+    grid = unit_grid(g)
+    ait = make_aitree(grid, bank, max_cells=4, max_pred=k)
+    lo = rng.uniform(-1, 0.9, (B, 2))
+    q = jnp.asarray(np.concatenate([lo, lo + 0.05], 1), jnp.float32)
+
+    # both competitors are the full predict pipeline INCLUDING cell
+    # routing (timing only one side's cells_of_queries would bias the
+    # comparison) — exactly the two rungs predict_compact dispatches
+    @jax.jit
+    def dense(qq):
+        scores, _ = predict_scores(ait, qq, L)
+        return traversal.compact_mask_counted(scores > ait.threshold, k)
+
+    @jax.jit
+    def fused(qq):
+        return predict_compact(ait, qq, L, use_kernel=True)[:3]
+
+    # sanity: identical slots, or the timing comparison is meaningless
+    for a, b in zip(fused(q), dense(q)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    shape = f"B{B}xL{L}k{k}"
+    t_fused, t_dense = _med_time_pair(lambda: fused(q), lambda: dense(q),
+                                      reps=40)
+    dense_mb = B * L * 4 / 1e6
+    rows.append((f"ai_fused_predict_{shape}_us", t_fused * 1e6,
+                 f"speedup_vs_dense={t_dense / t_fused:.2f}x,"
+                 f"dense_table_mb={dense_mb:.2f}"))
+    rows.append((f"ai_dense_predict_{shape}_us", t_dense * 1e6,
+                 f"cells={C},Cl={Cl}"))
+
+    # query level: predict + refine + result gather, dense vs compact
+    M = 8
+    tree = DeviceTree(
+        levels=(Level(mbrs=jnp.asarray(
+            np.concatenate([lo2 := rng.uniform(-1, 1, (L, 2)),
+                            lo2 + 0.2], 1), jnp.float32),
+            parent=jnp.zeros((L,), jnp.int32)),),
+        leaf_entries=jnp.asarray(rng.uniform(-1, 1, (L, M, 2)), jnp.float32),
+        leaf_entry_ids=jnp.asarray(np.arange(L * M).reshape(L, M),
+                                   jnp.int32),
+        leaf_counts=jnp.full((L,), M, jnp.int32), n_points=L * M,
+        max_entries=M)
+    qd = jax.jit(lambda qq: ai_query(ait, tree, qq, max_results=128))
+    qf = jax.jit(lambda qq: ai_query_compact(ait, tree, qq, max_results=128,
+                                             use_kernel=True))
+    rd, rf = qd(q), qf(q)
+    np.testing.assert_array_equal(np.asarray(rd.n_results),
+                                  np.asarray(rf.n_results))
+    np.testing.assert_array_equal(np.asarray(rd.fallback),
+                                  np.asarray(rf.fallback))
+    t_f, t_d = _med_time_pair(lambda: qf(q), lambda: qd(q), reps=40)
+    rows.append((f"ai_fused_query_{shape}_us", t_f * 1e6,
+                 f"speedup_vs_dense={t_d / t_f:.2f}x"))
+    rows.append((f"ai_dense_query_{shape}_us", t_d * 1e6, ""))
 
 
 def _sched_traffic(Q: int, kind: str, rng) -> np.ndarray:
@@ -347,6 +444,7 @@ def main(quick: bool = False) -> list:
                        batch=256 if quick else 512)
     traversal_micro(rows)
     compaction_micro(rows)
+    ai_fusion_micro(rows)
     if not quick:
         # the quick (CI fast-job) run skips this section: the same job
         # already runs it via the dedicated `make bench-smoke` gate

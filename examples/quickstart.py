@@ -1,11 +1,14 @@
 """Quickstart: build an "AI+R"-tree and answer range queries exactly.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--points N] [--queries Q]
 
 Walks the whole paper in ~30 lines of user-facing API: data → R-tree →
 workload α labelling → AI+R fit → hybrid querying, with the classical
-R-path as the correctness oracle.
+R-path as the correctness oracle. ``--points/--queries`` scale the run
+down (``make examples-smoke`` uses toy sizes in CI).
 """
+import argparse
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -14,14 +17,20 @@ from repro.core.hybrid import hybrid_query
 from repro.core.rtree import RTree
 from repro.data import synth
 
+parser = argparse.ArgumentParser()
+parser.add_argument("--points", type=int, default=50_000)
+parser.add_argument("--queries", type=int, default=2000)
+args = parser.parse_args()
+
 # 1. a clustered spatial dataset (tweets-like) and a dynamic R-tree
-points = synth.tweets_like(50_000, seed=7)
+points = synth.tweets_like(args.points, seed=7)
 tree = RTree(max_entries=64).insert_all(points)
 dtree = device_tree.flatten(tree)
 print(f"R-tree: {dtree.n_leaves} leaves, height {dtree.height}")
 
 # 2. a fixed query workload, labelled by executing it (visited/true leaves)
-queries = synth.synth_queries(points, selectivity=1e-4, n_queries=2000)
+queries = synth.synth_queries(points, selectivity=1e-4,
+                              n_queries=args.queries)
 workload = labels.make_workload(dtree, queries)
 print(f"workload: mean α = {workload.alpha.mean():.3f} "
       f"(low α ⇒ the R-tree wastes leaf accesses)")

@@ -24,6 +24,8 @@ parser = argparse.ArgumentParser()
 parser.add_argument("--points", type=int, default=100_000)
 parser.add_argument("--batches", type=int, default=20)
 parser.add_argument("--batch-size", type=int, default=512)
+parser.add_argument("--train-queries", type=int, default=3000,
+                    help="training queries per selectivity bucket")
 parser.add_argument("--distributed", action="store_true")
 args = parser.parse_args()
 
@@ -33,7 +35,7 @@ dtree = device_tree.flatten(tree)
 
 # training workload: mixture of selectivities (mixed α population)
 train_q = np.concatenate([
-    synth.synth_queries(points, s, 3000, seed=i)
+    synth.synth_queries(points, s, args.train_queries, seed=i)
     for i, s in enumerate((2e-5, 5e-5, 2e-4))])
 workload = labels.make_workload(dtree, train_q)
 hybrid, report = build.fit_airtree(dtree, workload, kind="knn")

@@ -33,8 +33,12 @@ from repro.core import traversal
 @dataclasses.dataclass(frozen=True)
 class AITree:
     grid: Grid
-    bank: Union[MLPBank, Forest]
-    kind: str = dataclasses.field(metadata=dict(static=True))  # "mlp"|"forest"
+    bank: Union[MLPBank, Forest, KNNBank]
+    # ``kind`` names the bank family and selects the inference path:
+    # "mlp" (MLPBank, the TPU-native stacked experts — the only kind with a
+    # fused prediction kernel), "forest" (Forest, paper-faithful oblivious
+    # trees) or "knn" (KNNBank, memorization-complete nearest-stored-query).
+    kind: str = dataclasses.field(metadata=dict(static=True))
     max_cells: int = dataclasses.field(metadata=dict(static=True))
     max_pred: int = dataclasses.field(metadata=dict(static=True))
     threshold: float = dataclasses.field(metadata=dict(static=True))
@@ -47,19 +51,86 @@ def make_aitree(grid: Grid, bank, *, max_cells: int = 4, max_pred: int = 64,
                   max_pred=max_pred, threshold=threshold)
 
 
+def cell_slot_probs(ait: AITree, queries: jnp.ndarray,
+                    cell_ids: jnp.ndarray) -> jnp.ndarray:
+    """Per-(query, cell-slot) classifier scores: [B, S] ids → [B, S, Cl]."""
+    if ait.kind == "mlp":
+        return jax.nn.sigmoid(cell_logits_for(ait.bank, queries, cell_ids))
+    if ait.kind == "knn":
+        return knn_probs(ait.bank, queries, cell_ids)
+    return cell_probs_for(ait.bank, queries, cell_ids)
+
+
 def predict_scores(ait: AITree, queries: jnp.ndarray, n_leaves: int
                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """[B, 4] → (leaf scores [B, L], cell_overflow [B])."""
+    """[B, 4] → (leaf scores [B, L], cell_overflow [B]).
+
+    The dense prediction path — kept as the fused kernel's oracle and for
+    consumers that need the full score table (labels, α, training,
+    ``pred_mask``). The serving path uses ``predict_compact``.
+    """
     cell_ids, valid, overflow = cells_of_queries(
         ait.grid, queries, ait.max_cells)
-    if ait.kind == "mlp":
-        probs = jax.nn.sigmoid(cell_logits_for(ait.bank, queries, cell_ids))
-    elif ait.kind == "knn":
-        probs = knn_probs(ait.bank, queries, cell_ids)
-    else:
-        probs = cell_probs_for(ait.bank, queries, cell_ids)
+    probs = cell_slot_probs(ait, queries, cell_ids)
     scores = global_scores(ait.bank, probs, valid, cell_ids, n_leaves)
     return scores, overflow
+
+
+def predict_compact(ait: AITree, queries: jnp.ndarray, n_leaves: int, *,
+                    use_kernel: bool = False,
+                    tile_b=None, tile_l=None
+                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                               jnp.ndarray]:
+    """Prediction straight to the compact slot table: [B, 4] →
+    ``(leaf_idx [B, max_pred] i32, valid [B, max_pred] bool, n_pred [B]
+    i32, cell_overflow [B] bool)``.
+
+    Semantically ``compact_mask_counted(predict_scores > threshold,
+    max_pred)`` plus the cell-routing overflow flag. With ``use_kernel``
+    and an MLP bank the whole pipeline runs inside the fused Pallas
+    kernel (``kernels.mlp_infer``) and the dense ``[B, L]`` score table
+    is never materialized — absent from the lowered HLO. kNN/forest banks
+    and the no-kernel path run the dense oracle and compact it with the
+    identical scheme (bit-identical, next rung of the fallback ladder).
+    ``tile_b``/``tile_l`` override the kernel's tile choice
+    (testing/tuning only).
+    """
+    if ait.kind == "mlp" and use_kernel:
+        cell_ids, valid, overflow = cells_of_queries(
+            ait.grid, queries, ait.max_cells)
+        from repro.kernels import ops as kops
+        idx, v, cnt = kops.mlp_predict_compact(
+            queries, ait.bank, cell_ids, valid, n_leaves=n_leaves,
+            k=ait.max_pred, threshold=ait.threshold, tb=tile_b, tl=tile_l)
+        return idx, v, cnt, overflow
+    scores, overflow = predict_scores(ait, queries, n_leaves)
+    idx, v, cnt = traversal.compact_mask_counted(
+        scores > ait.threshold, ait.max_pred)
+    return idx, v, cnt, overflow
+
+
+def _refine_and_flag(ait: AITree, tree: DeviceTree, queries: jnp.ndarray,
+                     leaf_idx: jnp.ndarray, valid: jnp.ndarray,
+                     n_pred: jnp.ndarray, cell_over: jnp.ndarray,
+                     max_results: int, use_kernel: bool):
+    """Shared tail of the AI query pipelines: refine the predicted slot
+    table, gather result ids, and assemble the paper's fallback signals
+    (empty prediction, mispredicted zero-count leaf, cell/prediction
+    overflow, result truncation). One implementation so ``ai_query`` and
+    ``ai_query_compact`` cannot drift apart on the fallback convention.
+    Returns ``(counts, n_pred_clamped, n_results, result_ids, fallback)``.
+    """
+    pred_over = n_pred > ait.max_pred
+    ref = traversal.refine_leaves(tree, queries, leaf_idx, valid,
+                                  use_kernel=use_kernel)
+    empty = n_pred == 0
+    # paper's misprediction signal: a predicted leaf with no qualifying entry
+    mispredict = jnp.any((ref.counts == 0) & valid, axis=-1)
+    result_ids, trunc = traversal.gather_result_ids(tree, ref, max_results)
+    fallback = empty | mispredict | cell_over | pred_over | trunc
+    n_results = jnp.sum(ref.counts * valid.astype(jnp.int32), axis=-1)
+    return (ref.counts, jnp.minimum(n_pred, ait.max_pred), n_results,
+            result_ids, fallback)
 
 
 class AIQueryResult(NamedTuple):
@@ -83,19 +154,61 @@ def ai_query(ait: AITree, tree: DeviceTree, queries: jnp.ndarray, *,
     # count that feeds n_pred / the empty and overflow fallback signals
     leaf_idx, valid, n_pred = traversal.compact_mask_counted(
         pred, ait.max_pred)
-    pred_over = n_pred > ait.max_pred
-    ref = traversal.refine_leaves(tree, queries, leaf_idx, valid,
-                                  use_kernel=use_kernel)
-    empty = n_pred == 0
-    # paper's misprediction signal: a predicted leaf with no qualifying entry
-    mispredict = jnp.any((ref.counts == 0) & valid, axis=-1)
-    result_ids, trunc = traversal.gather_result_ids(tree, ref, max_results)
-    fallback = empty | mispredict | cell_over | pred_over | trunc
+    counts, n_pred_c, n_results, result_ids, fallback = _refine_and_flag(
+        ait, tree, queries, leaf_idx, valid, n_pred, cell_over,
+        max_results, use_kernel)
     return AIQueryResult(
         pred_mask=pred,
-        counts=ref.counts,
-        n_pred=jnp.minimum(n_pred, ait.max_pred),
-        n_results=jnp.sum(ref.counts * valid.astype(jnp.int32), axis=-1),
+        counts=counts,
+        n_pred=n_pred_c,
+        n_results=n_results,
+        result_ids=result_ids,
+        fallback=fallback,
+    )
+
+
+class AICompactResult(NamedTuple):
+    leaf_idx: jnp.ndarray      # [B, max_pred] predicted leaves (ID order)
+    valid: jnp.ndarray         # [B, max_pred] slot validity
+    counts: jnp.ndarray        # [B, max_pred] qualifying entries per slot
+    n_pred: jnp.ndarray        # [B] leaves accessed by the AI path
+    n_results: jnp.ndarray     # [B] qualifying points found
+    result_ids: jnp.ndarray    # [B, max_results] i32, -1 pad
+    fallback: jnp.ndarray      # [B] bool — run the exact R-path instead
+
+
+@functools.partial(jax.jit, static_argnames=("max_results", "use_kernel",
+                                             "tile_b", "tile_l"))
+def ai_query_compact(ait: AITree, tree: DeviceTree, queries: jnp.ndarray, *,
+                     max_results: int = 512, use_kernel: bool = False,
+                     tile_b=None, tile_l=None) -> AICompactResult:
+    """Serving-path AI query: fused predict+compact → refine.
+
+    The ``ai_query`` variant for the hot path, mirroring what
+    ``range_query_compact`` is to ``range_query``: prediction lands
+    directly in the ``[B, max_pred]`` slot table that feeds the
+    scalar-prefetch refine kernel, so with ``use_kernel`` (MLP banks) the
+    dense ``[B, L]`` score table never round-trips through HBM and is
+    absent from the lowered HLO. Per-field bit-identical to ``ai_query``
+    on every shared field — including the fallback convention: *empty*
+    prediction, the paper's misprediction signal (a predicted leaf with
+    zero qualifying entries), cell/prediction overflow, and result
+    truncation. Use ``ai_query`` when ``pred_mask`` itself is needed
+    (exact-fit evaluation, labels).
+    """
+    queries = queries.astype(jnp.float32)
+    leaf_idx, valid, n_pred, cell_over = predict_compact(
+        ait, queries, tree.n_leaves, use_kernel=use_kernel,
+        tile_b=tile_b, tile_l=tile_l)
+    counts, n_pred_c, n_results, result_ids, fallback = _refine_and_flag(
+        ait, tree, queries, leaf_idx, valid, n_pred, cell_over,
+        max_results, use_kernel)
+    return AICompactResult(
+        leaf_idx=leaf_idx,
+        valid=valid,
+        counts=counts,
+        n_pred=n_pred_c,
+        n_results=n_results,
         result_ids=result_ids,
         fallback=fallback,
     )

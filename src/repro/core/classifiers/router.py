@@ -20,12 +20,23 @@ import numpy as np
 from repro.core.classifiers.forest import _fit_oblivious_tree
 
 
+def router_features_jnp(queries: jnp.ndarray) -> jnp.ndarray:
+    """[Q, 4] rects → [Q, 6] features: corners + width/height.
+
+    The single source of truth for the router's feature map — the device
+    inference path (``predict_proba``) and the host trainer both call it,
+    so the two can never drift (they used to be separate inline copies).
+    """
+    q = queries.astype(jnp.float32)
+    return jnp.concatenate(
+        [q, (q[:, 2] - q[:, 0])[:, None], (q[:, 3] - q[:, 1])[:, None]],
+        axis=1)
+
+
 def router_features(queries: np.ndarray) -> np.ndarray:
-    """[Q, 4] rects → [Q, 6] features: corners + width/height."""
-    q = np.asarray(queries, dtype=np.float32)
-    w = q[:, 2] - q[:, 0]
-    h = q[:, 3] - q[:, 1]
-    return np.concatenate([q, w[:, None], h[:, None]], axis=1)
+    """Host-side wrapper over the shared jnp feature fn (trainer path)."""
+    return np.asarray(
+        router_features_jnp(jnp.asarray(queries, jnp.float32)))
 
 
 @jax.tree_util.register_dataclass
@@ -44,10 +55,7 @@ class Router:
 def predict_proba(router: Router, queries: jnp.ndarray) -> jnp.ndarray:
     """[B, 4] → [B] P(high-overlap). Runs the Pallas forest kernel."""
     from repro.kernels import ops as kops
-    q = queries.astype(jnp.float32)
-    feats = jnp.concatenate(
-        [q, (q[:, 2] - q[:, 0])[:, None], (q[:, 3] - q[:, 1])[:, None]],
-        axis=1)
+    feats = router_features_jnp(queries)
     votes = kops.forest_infer(feats, router.feat_idx, router.thresh,
                               router.tables)          # [B, 1] summed votes
     return votes[:, 0] / router.feat_idx.shape[0]

@@ -165,6 +165,38 @@ class AIPathOut(NamedTuple):
     fallback: jnp.ndarray    # [B] prediction unusable → R answer
 
 
+class SlotRefineOut(NamedTuple):
+    """Shared refine-stage output over one [B, K] slot table (psum'd)."""
+    n_results: jnp.ndarray   # [B] qualifying points across valid slots
+    n_hit: jnp.ndarray       # [B] valid slots with ≥ 1 qualifying point
+    n_valid: jnp.ndarray     # [B] valid slots
+
+
+def _refine_slots(h: HybridTree, queries: jnp.ndarray, leaf_idx: jnp.ndarray,
+                  valid: jnp.ndarray, cfg: EngineConfig,
+                  model_axis: str) -> SlotRefineOut:
+    """Shared refine stage: a compact ``[B, K]`` slot table of local leaf
+    ids in, globally-reduced per-query counts out.
+
+    Both paths feed this — the slot table is the single inter-path
+    contract: the R path's ``visited_leaves_compact`` slots and the AI
+    path's predicted slots (fused kernel or oracle, either union mode)
+    land here identically. The three reductions cover every downstream
+    need: ``n_results`` (answers), ``n_hit`` (the R path's true-leaf
+    count), and ``n_valid`` − ``n_hit`` > 0 (the paper's misprediction
+    signal — some predicted leaf held no qualifying entry).
+    """
+    ref = traversal.refine_leaves(h.tree, queries, leaf_idx, valid,
+                                  use_kernel=cfg.use_kernel)
+    vi = valid.astype(jnp.int32)
+    n_results = jax.lax.psum(jnp.sum(ref.counts * vi, -1), model_axis)
+    n_hit = jax.lax.psum(
+        jnp.sum(((ref.counts > 0) & valid).astype(jnp.int32), -1),
+        model_axis)
+    n_valid = jax.lax.psum(jnp.sum(vi, -1), model_axis)
+    return SlotRefineOut(n_results=n_results, n_hit=n_hit, n_valid=n_valid)
+
+
 def _r_path(h: HybridTree, queries: jnp.ndarray, cfg: EngineConfig,
             model_axis: str) -> RPathOut:
     """Classical stage over the local leaf shard.
@@ -180,34 +212,87 @@ def _r_path(h: HybridTree, queries: jnp.ndarray, cfg: EngineConfig,
     shards are handled downstream — the former engine-local loop
     self-gathered the root mask there.
     """
-    tree = h.tree
     cv = traversal.visited_leaves_compact(
-        tree, queries, cfg.max_visited, use_kernel=cfg.use_kernel)
-    leaf_idx, valid = cv.leaf_idx, cv.valid
-    n_vis_loc, over_loc = cv.n_visited, cv.overflow
-    r_trunc = jax.lax.psum(over_loc.astype(jnp.int32), model_axis) > 0
-    ref = traversal.refine_leaves(tree, queries, leaf_idx, valid,
-                                  use_kernel=cfg.use_kernel)
-    r_counts = jax.lax.psum(
-        jnp.sum(ref.counts * valid.astype(jnp.int32), -1), model_axis)
-    n_visited = jax.lax.psum(n_vis_loc, model_axis)       # [B]
-    n_true = jax.lax.psum(
-        jnp.sum(((ref.counts > 0) & valid).astype(jnp.int32), -1),
-        model_axis)
-    return RPathOut(r_counts=r_counts, n_visited=n_visited, n_true=n_true,
-                    r_truncated=r_trunc)
+        h.tree, queries, cfg.max_visited, use_kernel=cfg.use_kernel)
+    r_trunc = jax.lax.psum(cv.overflow.astype(jnp.int32), model_axis) > 0
+    ro = _refine_slots(h, queries, cv.leaf_idx, cv.valid, cfg, model_axis)
+    n_visited = jax.lax.psum(cv.n_visited, model_axis)    # [B]
+    return RPathOut(r_counts=ro.n_results, n_visited=n_visited,
+                    n_true=ro.n_hit, r_truncated=r_trunc)
+
+
+def _ai_slots_topk(h: HybridTree, queries: jnp.ndarray, cfg: EngineConfig,
+                   kind: str, loc_ids: jnp.ndarray, local: jnp.ndarray,
+                   model_axis: str, n_model: int, L_loc: int, L_glob: int):
+    """Per-shard compact prediction slots + shard union (``topk`` mode).
+
+    Beyond-paper: each expert shard compacts its local cells' predictions
+    to the first ``max_pred`` **distinct** global leaf ids (leaf-ID
+    order) — with an MLP bank under ``use_kernel`` that is the fused
+    prediction kernel writing the slot table straight from VMEM; the
+    oracle rung runs ``compact_candidates`` over the small [B, S·Cl]
+    candidate list. The union reads the all-gathered ``[B, shards·k]``
+    slot lists directly (the previous implementation re-top-k'd dense
+    per-leaf scores): single-shard meshes need no union at all — the
+    shard's slots *are* the answer, so no per-leaf tensor of any size
+    exists; multi-shard meshes scatter the gathered ids into the
+    ``[B, L_loc]`` local-range mask, which *shrinks* with the mesh (a
+    pairwise ``compact_candidates`` dedup here would grow O((shards·k)²)
+    transients on the hot path instead). Exact whenever no shard
+    overflows its k distinct predictions (guaranteed complete lists);
+    overflow falls back — a fallback is never wrong, only slower.
+
+    Returns ``(p_idx, p_valid, n_pred, overflow)`` with ``p_idx`` local
+    leaf ids for the shared refine stage and ``n_pred`` the
+    globally-deduped predicted-leaf count (sibling cells on *different*
+    shards can predict the same leaf, but each distinct leaf lands in
+    exactly one shard's range — the psum of local mask counts dedups).
+    """
+    B = queries.shape[0]
+    k = cfg.max_pred
+    midx = jax.lax.axis_index(model_axis)
+    if kind == "mlp" and cfg.use_kernel:
+        from repro.kernels import ops as kops
+        g_idx, g_valid, g_cnt = kops.mlp_predict_compact(
+            queries, h.ait.bank, loc_ids, local, n_leaves=L_glob, k=k,
+            threshold=cfg.threshold)
+    else:
+        from repro.core.aitree import cell_slot_probs
+        probs = cell_slot_probs(h.ait, queries, loc_ids)
+        lm = h.ait.bank.label_map[loc_ids]                # [B, S, Cl]
+        lok = local[:, :, None] & h.ait.bank.lmask[loc_ids] \
+            & (probs > cfg.threshold)
+        g_idx, g_valid, g_cnt = traversal.compact_candidates(
+            lm.reshape(B, -1), lok.reshape(B, -1), k)
+    if n_model == 1:
+        return g_idx, g_valid, g_cnt, g_cnt > k
+    trunc = jax.lax.psum((g_cnt > k).astype(jnp.int32), model_axis) > 0
+    ag_i = jax.lax.all_gather(g_idx, model_axis, axis=1, tiled=True)
+    ag_v = jax.lax.all_gather(g_valid, model_axis, axis=1, tiled=True)
+    keep = ag_v & (ag_i >= midx * L_loc) & (ag_i < (midx + 1) * L_loc)
+    li = jnp.clip(ag_i - midx * L_loc, 0, L_loc - 1)
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    pred_loc = jnp.zeros((B, L_loc), jnp.int32).at[rows, li].max(
+        keep.astype(jnp.int32)) > 0
+    n_pred = jax.lax.psum(
+        jnp.sum(pred_loc.astype(jnp.int32), -1), model_axis)
+    p_idx, p_valid, _ = traversal.compact_mask_counted(pred_loc, k)
+    return p_idx, p_valid, n_pred, (n_pred > k) | trunc
 
 
 def _ai_path(h: HybridTree, queries: jnp.ndarray, cfg: EngineConfig,
              kind: str, model_axis: str, n_model: int) -> AIPathOut:
-    """Learned stage: per-cell experts → score union → refine predicted.
+    """Learned stage: per-cell experts → score union → shared refine.
 
-    ``n_model`` is the static model-axis size (``jax.lax.axis_size`` is
-    too new for the supported jax range).
+    Both ``score_union`` modes end in the same compact ``[B, max_pred]``
+    slot table handed to ``_refine_slots``: ``topk`` builds it without
+    ever materializing per-leaf scores (``_ai_slots_topk``); ``pmax``
+    keeps the paper-faithful dense ``[B, L_glob]`` union and compacts the
+    local slice. ``n_model`` is the static model-axis size
+    (``jax.lax.axis_size`` is too new for the supported jax range).
     """
-    tree = h.tree
     B = queries.shape[0]
-    L_loc = tree.levels[-1].mbrs.shape[0]
+    L_loc = h.tree.levels[-1].mbrs.shape[0]
     midx = jax.lax.axis_index(model_axis)
     # global cell ids per query; translate to local expert slots
     cell_ids, cvalid, cell_over = cells_of_queries(
@@ -218,69 +303,32 @@ def _ai_path(h: HybridTree, queries: jnp.ndarray, cfg: EngineConfig,
     c0 = midx * C_loc
     local = (cell_ids >= c0) & (cell_ids < c0 + C_loc) & cvalid
     loc_ids = jnp.clip(cell_ids - c0, 0, C_loc - 1)
-    if kind == "knn":
-        from repro.core.classifiers.knn import cell_probs_for as probs_fn
-        probs = probs_fn(h.ait.bank, queries, loc_ids)
-    elif kind == "mlp":
-        from repro.core.classifiers.mlp import cell_logits_for
-        probs = jax.nn.sigmoid(
-            cell_logits_for(h.ait.bank, queries, loc_ids))
-    else:
-        from repro.core.classifiers.forest import cell_probs_for as pf
-        probs = pf(h.ait.bank, queries, loc_ids)
     L_glob = L_loc * n_model
     if cfg.score_union == "pmax":
         # paper-faithful dense union: one pmax over the full score table
+        from repro.core.aitree import cell_slot_probs
         from repro.core.classifiers.mlp import global_scores
+        probs = cell_slot_probs(h.ait, queries, loc_ids)
         scores = global_scores(h.ait.bank, probs, local, loc_ids, L_glob)
         scores = jax.lax.pmax(scores, model_axis)         # [B, L_glob]
         pred = scores > cfg.threshold
         pred_loc = jax.lax.dynamic_slice_in_dim(
             pred, midx * L_loc, L_loc, 1)
         n_pred = jnp.sum(pred.astype(jnp.int32), -1)      # replicated
-        trunc = jnp.zeros((B,), bool)
+        p_idx, p_valid, p_cnt = traversal.compact_mask_counted(
+            pred_loc, cfg.max_pred)
+        over = (p_cnt > cfg.max_pred) | (n_pred > cfg.max_pred)
+        over = jax.lax.psum(over.astype(jnp.int32), model_axis) > 0
     else:
-        # beyond-paper: compress each expert shard's predictions to its
-        # top-k (leaf id, score) pairs taken DIRECTLY from the per-slot
-        # cell outputs (no [B, L_glob] scatter table at all), then union
-        # the all-gathered candidate lists. Exact: any query whose
-        # per-shard candidate count exceeds k falls back (conservative
-        # on duplicate predictions from sibling cells — a fallback is
-        # never wrong, only slower).
-        k = cfg.max_pred
-        lm = h.ait.bank.label_map[loc_ids]                # [B, S, Cl]
-        lok = local[:, :, None] & h.ait.bank.lmask[loc_ids]
-        flat_p = jnp.where(lok, probs, 0.0).reshape(B, -1)
-        flat_i = jnp.where(lok, lm, 0).reshape(B, -1)
-        c_loc = jnp.sum((flat_p > cfg.threshold).astype(jnp.int32), -1)
-        trunc = c_loc > k
-        vals, slot = jax.lax.top_k(flat_p, k)             # [B, k]
-        rows = jnp.arange(B, dtype=jnp.int32)[:, None]
-        ids = flat_i[rows, slot]                          # global leaf id
-        ag_v = jax.lax.all_gather(vals, model_axis, axis=1, tiled=True)
-        ag_i = jax.lax.all_gather(ids, model_axis, axis=1, tiled=True)
-        keep = (ag_v > cfg.threshold) & \
-            (ag_i >= midx * L_loc) & (ag_i < (midx + 1) * L_loc)
-        li = jnp.clip(ag_i - midx * L_loc, 0, L_loc - 1)
-        pred_loc = jnp.zeros((B, L_loc), jnp.int32).at[rows, li].max(
-            keep.astype(jnp.int32)) > 0
-        n_pred = jax.lax.psum(
-            jnp.sum(pred_loc.astype(jnp.int32), -1), model_axis)
-        trunc = jax.lax.psum(trunc.astype(jnp.int32), model_axis) > 0
-    p_idx, p_valid, p_cnt = traversal.compact_mask_counted(
-        pred_loc, cfg.max_pred)
-    p_ref = traversal.refine_leaves(tree, queries, p_idx, p_valid,
-                                    use_kernel=cfg.use_kernel)
-    ai_counts = jax.lax.psum(
-        jnp.sum(p_ref.counts * p_valid.astype(jnp.int32), -1), model_axis)
+        p_idx, p_valid, n_pred, over = _ai_slots_topk(
+            h, queries, cfg, kind, loc_ids, local, model_axis, n_model,
+            L_loc, L_glob)
+    ro = _refine_slots(h, queries, p_idx, p_valid, cfg, model_axis)
     empty = n_pred == 0
-    mis = jax.lax.psum(
-        jnp.sum(((p_ref.counts == 0) & p_valid).astype(jnp.int32), -1),
-        model_axis) > 0
-    over = (p_cnt > cfg.max_pred) | (n_pred > cfg.max_pred)
-    over = jax.lax.psum(over.astype(jnp.int32), model_axis) > 0
-    fallback = empty | mis | cell_over | over | trunc
-    return AIPathOut(ai_counts=ai_counts, n_pred=n_pred, fallback=fallback)
+    mis = ro.n_valid > ro.n_hit   # some predicted leaf had no qualifier
+    fallback = empty | mis | cell_over | over
+    return AIPathOut(ai_counts=ro.n_results, n_pred=n_pred,
+                     fallback=fallback)
 
 
 def _route_combine(h: HybridTree, queries: jnp.ndarray, rp: RPathOut,

@@ -16,7 +16,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.aitree import AITree, ai_query
+from repro.core.aitree import AITree, ai_query_compact
 from repro.core.classifiers.router import Router, route_high
 from repro.core.device_tree import DeviceTree
 from repro.core import traversal
@@ -64,8 +64,11 @@ def hybrid_query(h: HybridTree, queries: jnp.ndarray, *,
     else:
         high = route_high(h.router, queries)
 
-    ai = ai_query(h.ait, h.tree, queries, max_results=max_results,
-                  use_kernel=use_kernel)
+    # serving-path compact AI query: prediction lands in the [B, max_pred]
+    # slot table (bit-identical to the dense ai_query on all shared fields;
+    # the [B, L] score table exists only on the kernel-free oracle rung)
+    ai = ai_query_compact(h.ait, h.tree, queries, max_results=max_results,
+                          use_kernel=use_kernel)
     r = traversal.range_query(h.tree, queries, max_visited=max_visited,
                               max_results=max_results, use_kernel=use_kernel)
 

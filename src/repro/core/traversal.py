@@ -118,6 +118,38 @@ def compact_mask(mask: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
     return idx, valid
 
 
+def compact_candidates(ids: jnp.ndarray, ok: jnp.ndarray, k: int
+                       ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """First ``k`` **distinct** ids (ascending) among masked candidates.
+
+    ``ids`` [B, N] i32 (≥ 0 where ``ok``), ``ok`` [B, N] bool →
+    ``(slots [B, k] i32, valid [B, k] bool, count [B] i32)`` with
+    ``count`` the distinct-id total. Bit-compatible with
+    ``compact_mask_counted(scatter(ids into [B, L]), k)`` — same slot
+    order, zero-filled invalid slots, same count — but without ever
+    materializing a ``[B, L]`` table: dedup and ranking are O(N²)
+    pairwise compares, the right trade when the candidate list is small
+    (N ≪ L — per-cell label slots, gathered shard top-k lists). This is
+    what lets the engine's AI path keep the compact slot table as the
+    only inter-stage format.
+    """
+    B, N = ids.shape
+    ids = ids.astype(jnp.int32)
+    eq = ids[:, :, None] == ids[:, None, :]          # [B, i, j]
+    earlier = jnp.tril(jnp.ones((N, N), jnp.bool_), -1)  # j < i
+    dup = jnp.any(eq & earlier[None] & ok[:, None, :], axis=-1)
+    rep = ok & ~dup                                  # first occurrence per id
+    count = jnp.sum(rep.astype(jnp.int32), axis=-1)
+    less = ids[:, None, :] < ids[:, :, None]         # id_j < id_i
+    rank = jnp.sum((rep[:, None, :] & less).astype(jnp.int32), axis=-1)
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    slot = jnp.where(rep & (rank < k), rank, k)      # park the rest at k
+    slots = jnp.zeros((B, k + 1), jnp.int32).at[rows, slot].max(
+        jnp.where(rep, ids, 0))[:, :k]
+    valid = jnp.arange(k, dtype=jnp.int32)[None, :] < count[:, None]
+    return jnp.where(valid, slots, 0), valid, count
+
+
 def compact_mask_topk(mask: jnp.ndarray, k: int
                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Pre-optimization ``top_k``-based compaction (equivalence oracle)."""

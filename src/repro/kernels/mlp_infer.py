@@ -1,0 +1,289 @@
+"""Pallas TPU kernel: fused AI-path prediction → compact slot table.
+
+The AI path of the "AI+R"-tree turns a range query into multi-label
+classification: run the ≤ ``max_cells`` cell experts a query overlaps,
+union their per-leaf scores, threshold, and access only the predicted
+leaves. Before this kernel the learned side materialized the dense
+``[B, L]`` score table in HBM (``predict_scores`` → ``global_scores`` →
+threshold → ``compact_mask_counted``) — the paper's *fast* path was the
+memory-heavy half of the engine. This kernel fuses the whole prediction
+pipeline into one ``pallas_call`` that emits the same ``[B, K]`` slot
+table + per-row count contract as ``traverse_compact_t``; the ``[B, L]``
+scores never exist outside VMEM tiles.
+
+Stages, all inside the kernel:
+
+* **Cell-routed MLP-bank inference** (once per query tile, ``j == 0``).
+  Per-query expert-parameter staging is a lane gather
+  (``w1[cell_ids[b]]``), which Mosaic does not vectorize — so, exactly as
+  ``traverse_fused`` rewrites frontier expansion, the hardware form stages
+  params through **one-hot MXU matmuls**: ``onehot(cell_ids[:, s]) @
+  W1.reshape(C, F·H)`` pulls each query's ``[F, H]``/``[H, Cl]`` expert
+  block into per-query rows (exact: one-hot f32 matmul selects, never
+  mixes). The two layers then run as broadcasted multiply-accumulates over
+  the static ``F``/``H`` axes — the per-query weights make the contraction
+  batched, which the MXU cannot express directly, but the selections
+  themselves are dense MXU work.
+
+* **Sigmoid + threshold** on the ``[TB, Cl]`` logits per cell slot; the
+  thresholded candidates and their ``label_map`` targets (selected by the
+  same one-hot matmuls) persist in VMEM scratch across the leaf-tile
+  sweep: ``[TB, S·Cl]`` — the whole inter-stage state, vs ``[B, L]``.
+
+* **Per-cell → global scatter + max-union.** For each leaf tile, a
+  candidate-compare loop ORs each (slot, label) candidate into the tile's
+  prediction mask (``tgt == column``): union across a query's cells and
+  dedup of sibling-cell duplicates come free from the OR. A ``pl.when``
+  guard on the tile's [min, max] candidate-target range skips leaf tiles
+  no candidate maps into — predictions are spatially tight, so most tiles
+  of most batches are dead (the traversal kernel's early exit, on the
+  learned side).
+
+* **Compaction epilogue** — the cumsum-rank scheme shared with
+  ``traverse_compact_t`` (``_compact_epilogue_tpu`` / ``_interp``): first
+  ``k`` predicted leaf ids in leaf-ID order plus the per-row count, from
+  which the caller derives ``valid``, the *empty* and *overflow* fallback
+  signals, bit-identical to ``compact_mask_counted`` of the dense path.
+
+Threshold convention: requires ``threshold ≥ 0`` (the dense oracle's
+zero-initialized score scatter predicts *every* leaf under a negative
+threshold; the candidate union cannot). ``ops.py`` asserts this.
+
+Layout: queries/cell ids arrive row-major (``[B, F]``, ``[B, S]``) — the
+query axis stays on sublanes end to end, so no in-kernel transposes.
+``ops.py`` pads B to the query tile, the leaf axis to the leaf tile, and
+C to the lane quantum (padding cells carry ``label_map = -1``,
+``lmask = 0``; clipped ids never select them).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.traverse_fused import (COMPACT_KC, LANE,
+                                          _compact_epilogue_interp,
+                                          _compact_epilogue_tpu,
+                                          tuned_tiles_for_key)
+
+DEF_TB = 256    # query-tile (sublane axis)
+DEF_TL = 512    # leaf-tile (lane axis, multiple of 128)
+
+
+def tune_key_mlp(B: int, L: int, C: int, Cl: int, interp: bool) -> str:
+    """Autotune-cache key for the fused prediction kernel's form space
+    (same cache file as the traversal forms; see ``benchmarks/autotune``)."""
+    return f"mlp-{'interp' if interp else 'tpu'}:B{B}:L{L}:C{C}:Cl{Cl}"
+
+
+def tuned_tiles_mlp(B: int, L: int, C: int, Cl: int, interp: bool) -> dict:
+    return tuned_tiles_for_key(tune_key_mlp(B, L, C, Cl, interp))
+
+
+def vmem_estimate_mlp(C: int, F: int, H: int, Cl: int, S: int, tb: int,
+                      tl: int, kp: int, tpu_form: bool = True,
+                      kc: int = COMPACT_KC) -> int:
+    """Rough VMEM working-set bytes for the fused prediction kernel.
+
+    Counts the replicated bank operands (the dominant term — ``W2`` is
+    ``C·H·Cl`` floats), the per-slot one-hot + staged-parameter
+    transients, the candidate scratch, the leaf-tile mask, and the
+    compaction epilogue transient (form-dependent, exactly as
+    ``vmem_estimate_compact``: the TPU form's chunked rank-equality
+    scatter materializes a ``[tb, tl, kc]`` compare; the interpret form's
+    binary search only needs the ``[tb, tl]`` prefix count).
+    """
+    bank = C * (F * H + H + H * Cl + Cl + 2 * Cl) * 4
+    est = bank
+    # one-hot + staged params for one slot (slots are sequential)
+    est += tb * (C + F * H + H + H * Cl + Cl) * 4
+    est += 2 * tb * S * Cl * 4                    # candidate prob/tgt scratch
+    est += tb * tl * 4                            # prediction mask tile
+    est += tb * tl * (kc if tpu_form else 1) * 4  # epilogue transient
+    est += tb * (kp + 1) * 4                      # slot table + count
+    return est
+
+
+def _stage_infer_tpu(x_ref, cid_ref, ok_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                     lm_ref, lmk_ref, p_scr, t_scr, S: int, C: int, F: int,
+                     H: int, Cl: int, tb: int, thr: float):
+    """One-hot MXU inference for every cell slot of a query tile; writes
+    the thresholded candidates (0/1) and their global leaf targets (f32,
+    invalid parked at -1) to the ``[TB, S·Cl]`` VMEM scratch."""
+    dot = functools.partial(jax.lax.dot,
+                            preferred_element_type=jnp.float32)
+    for s in range(S):
+        ohb = (cid_ref[:, s:s + 1] ==
+               jax.lax.broadcasted_iota(jnp.int32, (tb, C), 1)) \
+            & (ok_ref[:, s:s + 1] > 0)
+        oh = ohb.astype(jnp.float32)                    # [TB, C]
+        w1s = dot(oh, w1_ref[:, :])                     # [TB, F·H]
+        b1s = dot(oh, b1_ref[:, :])                     # [TB, H]
+        acc = x_ref[:, 0:1] * w1s[:, :H]
+        for f in range(1, F):
+            acc = acc + x_ref[:, f:f + 1] * w1s[:, f * H:(f + 1) * H]
+        h = jnp.maximum(acc + b1s, 0.0)                 # [TB, H]
+        w2s = dot(oh, w2_ref[:, :])                     # [TB, H·Cl]
+        b2s = dot(oh, b2_ref[:, :])                     # [TB, Cl]
+        acc2 = h[:, 0:1] * w2s[:, :Cl]
+        for hh in range(1, H):
+            acc2 = acc2 + h[:, hh:hh + 1] * w2s[:, hh * Cl:(hh + 1) * Cl]
+        prob = jax.nn.sigmoid(acc2 + b2s)               # [TB, Cl]
+        tgt = dot(oh, lm_ref[:, :])                     # [TB, Cl] f32 ids
+        okc = dot(oh, lmk_ref[:, :]) > 0.5              # label-slot valid
+        cand = okc & (prob > thr)
+        p_scr[:, s * Cl:(s + 1) * Cl] = \
+            jnp.where(cand, 1.0, 0.0)
+        t_scr[:, s * Cl:(s + 1) * Cl] = \
+            jnp.where(cand, tgt, -1.0)
+
+
+def _make_predict_kernel(S: int, C: int, F: int, H: int, Cl: int, tb: int,
+                         tl: int, kp: int, thr: float,
+                         tpu_form: bool, kc: int = COMPACT_KC):
+    """Kernel body: fused cell-routed inference + scatter/union +
+    compaction.
+
+    ``tpu_form=True`` is the hardware graph (one-hot MXU staging, VMEM
+    candidate scratch persisted across leaf tiles under ``pl.when(j ==
+    0)``, range-guarded tile early exit, chunked rank-equality epilogue).
+    ``tpu_form=False`` is the branch-free interpret form: value-level
+    parameter gathers + the same einsum contraction order as the dense
+    oracle (``cell_logits_for``), value-level scatter into the tile, and
+    the searchsorted epilogue — interpret mode functionalizes ref-touching
+    conds, so the walk recomputes per leaf tile instead of using scratch
+    (the interpret default folds the leaf axis into one tile anyway).
+    """
+    SCl = S * Cl
+
+    def kernel(x_ref, cid_ref, ok_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+               lm_ref, lmk_ref, idx_ref, cnt_ref, p_scr, t_scr):
+        j = pl.program_id(1)
+
+        if tpu_form:
+            @pl.when(j == 0)
+            def _init():
+                idx_ref[:, :] = jnp.zeros((tb, kp), jnp.int32)
+                cnt_ref[:, :] = jnp.zeros((tb, 1), jnp.int32)
+                _stage_infer_tpu(x_ref, cid_ref, ok_ref, w1_ref, b1_ref,
+                                 w2_ref, b2_ref, lm_ref, lmk_ref, p_scr,
+                                 t_scr, S, C, F, H, Cl, tb, thr)
+
+            pv = p_scr[:, :]                             # [TB, S·Cl]
+            tv = t_scr[:, :]
+            # tile early exit: skip leaf tiles no candidate maps into
+            lo = jnp.min(jnp.where(pv > 0, tv, jnp.float32(2 ** 30)))
+            hi = jnp.max(tv)                             # invalid are -1
+            t0 = jnp.float32(j * tl)
+
+            @pl.when((lo < t0 + tl) & (hi >= t0))
+            def _live_tile():
+                colf = t0 + jax.lax.broadcasted_iota(
+                    jnp.int32, (tb, tl), 1).astype(jnp.float32)
+                mask = jnp.zeros((tb, tl), jnp.bool_)
+                for kk in range(SCl):
+                    mask = mask | ((pv[:, kk:kk + 1] > 0)
+                                   & (tv[:, kk:kk + 1] == colf))
+                col = j * tl + jax.lax.broadcasted_iota(
+                    jnp.int32, (tb, tl), 1)
+                _compact_epilogue_tpu(mask, col, idx_ref, cnt_ref, kp, kc)
+        else:
+            x = x_ref[:, :]                              # [TB, F]
+            cid = cid_ref[:, :]                          # [TB, S]
+            okr = ok_ref[:, :] > 0
+            w1 = w1_ref[:, :].reshape(C, F, H)[cid]      # [TB, S, F, H]
+            b1 = b1_ref[:, :][cid]
+            w2 = w2_ref[:, :].reshape(C, H, Cl)[cid]
+            b2 = b2_ref[:, :][cid]
+            h = jnp.maximum(
+                jnp.einsum("bf,bsfh->bsh", x, w1) + b1, 0.0)
+            logits = jnp.einsum("bsh,bshl->bsl", h, w2) + b2
+            prob = jax.nn.sigmoid(logits)                # [TB, S, Cl]
+            okc = okr[:, :, None] & (lmk_ref[:, :][cid] > 0.5)
+            cand = okc & (prob > thr)
+            trel = lm_ref[:, :][cid].astype(jnp.int32) - j * tl
+            intile = cand & (trel >= 0) & (trel < tl)
+            ti = jnp.where(intile, trel, tl).reshape(tb, SCl)
+            rows = jnp.arange(tb, dtype=jnp.int32)[:, None]
+            mask = jnp.zeros((tb, tl + 1), jnp.int32).at[rows, ti].max(
+                intile.reshape(tb, SCl).astype(jnp.int32))[:, :tl] > 0
+            _compact_epilogue_interp(mask, j, tl, kp, idx_ref, cnt_ref)
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "lp", "thr", "tb", "tl", "kc",
+                                    "interpret", "tpu_form"))
+def mlp_predict_compact_t(x: jnp.ndarray, cell_ids: jnp.ndarray,
+                          slot_ok: jnp.ndarray, w1f: jnp.ndarray,
+                          b1: jnp.ndarray, w2f: jnp.ndarray,
+                          b2: jnp.ndarray, lm: jnp.ndarray,
+                          lmk: jnp.ndarray, *, k: int, lp: int, thr: float,
+                          tb: int = DEF_TB, tl: int = DEF_TL,
+                          kc: int = COMPACT_KC, interpret: bool = False,
+                          tpu_form: bool | None = None
+                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused prediction entry point.
+
+    ``x`` [B, F] normalized features; ``cell_ids``/``slot_ok`` [B, S]
+    (ids clipped into [0, C)); ``w1f`` [C, F·H], ``b1`` [C, H], ``w2f``
+    [C, H·Cl], ``b2`` [C, Cl]; ``lm``/``lmk`` [C, Cl] f32 label map
+    (global leaf ids, -1 pads) and label-slot mask. ``lp`` is the
+    lane-padded leaf count (the scatter axis); B must be a multiple of
+    ``tb``, ``lp`` of ``tl``, C of LANE (ops.py pads). Returns
+    ``(leaf_idx [B, KP] i32, count [B, 1] i32)`` with the
+    ``traverse_compact_t`` slot contract: KP = ``k`` lane-rounded in the
+    TPU form, exactly ``k`` in the interpret form; row ``b``'s first
+    ``min(count[b], KP)`` slots hold its predicted leaf ids in leaf-ID
+    order, slots past the count are 0.
+
+    ``tpu_form`` defaults to ``not interpret``; pass ``tpu_form=True``
+    with ``interpret=True`` to validate the exact hardware graph off-TPU.
+    """
+    if tpu_form is None:
+        tpu_form = not interpret
+    B, F = x.shape
+    S = cell_ids.shape[1]
+    C = w1f.shape[0]
+    H = b1.shape[1]
+    Cl = b2.shape[1]
+    assert B % tb == 0 and lp % tl == 0 and C % LANE == 0, (B, lp, C, tb, tl)
+    kp = (k + LANE - 1) // LANE * LANE if tpu_form else k
+    assert kp % kc == 0 or not tpu_form, (kp, kc)
+    n_j = lp // tl
+    grid = (B // tb, n_j)
+
+    rep = lambda shape: pl.BlockSpec(shape, lambda i, j: (0, 0))  # noqa: E731
+    in_specs = [
+        pl.BlockSpec((tb, F), lambda i, j: (i, 0)),
+        pl.BlockSpec((tb, S), lambda i, j: (i, 0)),
+        pl.BlockSpec((tb, S), lambda i, j: (i, 0)),
+        rep((C, w1f.shape[1])),
+        rep((C, H)),
+        rep((C, w2f.shape[1])),
+        rep((C, Cl)),
+        rep((C, Cl)),
+        rep((C, Cl)),
+    ]
+
+    return pl.pallas_call(
+        _make_predict_kernel(S, C, F, H, Cl, tb, tl, kp, thr,
+                             tpu_form=tpu_form, kc=kc),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((tb, kp), lambda i, j: (i, 0)),
+                   pl.BlockSpec((tb, 1), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, kp), jnp.int32),
+                   jax.ShapeDtypeStruct((B, 1), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((tb, S * Cl), jnp.float32),
+                        pltpu.VMEM((tb, S * Cl), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), cell_ids.astype(jnp.int32),
+      slot_ok.astype(jnp.int32), w1f.astype(jnp.float32),
+      b1.astype(jnp.float32), w2f.astype(jnp.float32),
+      b2.astype(jnp.float32), lm.astype(jnp.float32),
+      lmk.astype(jnp.float32))

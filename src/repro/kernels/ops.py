@@ -21,6 +21,7 @@ from repro.kernels import mbr_intersect as _mbr
 from repro.kernels import leaf_refine as _refine
 from repro.kernels import forest_infer as _forest
 from repro.kernels import traverse_fused as _traverse
+from repro.kernels import mlp_infer as _mlp
 from repro.kernels import spatial_key as _skey
 from repro.kernels import wkv6 as _wkv6
 
@@ -217,6 +218,131 @@ def traverse_compact(queries: jnp.ndarray, level_mbrs, level_parents,
     idx, cnt = _traverse.traverse_compact_t(
         qp.T, int_mbrs_t, int_parents, leaf_mt, leaf_pt,
         k=k, tb=tb, tl=tl, sub_tl=sub_tl, kc=kc, interpret=interp)
+    count = cnt[:B, 0]
+    valid = jnp.arange(k, dtype=jnp.int32)[None, :] < count[:, None]
+    return jnp.where(valid, idx[:B, :k], 0), valid, count
+
+
+def _mlp_tiles(B: int, n_leaves: int, C: int, Cl: int, interp: bool,
+               tb: int | None = None, tl: int | None = None
+               ) -> tuple[int, int, int, int]:
+    """Tile resolution for the fused prediction kernel: explicit caller
+    override → autotune cache entry (``mlp-`` form keys) → hand-picked
+    default. Returns ``(tb, tl, kc, Lp)`` with ``Lp`` the lane-padded
+    leaf count (the kernel's scatter axis)."""
+    tune = _mlp.tuned_tiles_mlp(B, n_leaves, C, Cl, interp)
+    Lp = (max(128, n_leaves) + 127) // 128 * 128
+    if tb is None:
+        tb = tune.get("tb") or min(1024 if interp else _mlp.DEF_TB,
+                                   (max(8, B) + 7) // 8 * 8)
+    if tl is None:
+        # interpret folds the whole (lane-padded) leaf axis into one tile —
+        # emulated grid cells are not free and the walk has no scratch there
+        tl = tune.get("tl") or (Lp if interp else min(_mlp.DEF_TL, Lp))
+    kc = tune.get("kc", _traverse.COMPACT_KC)
+    return tb, tl, kc, Lp
+
+
+def _mlp_gate(B: int, bank, S: int, n_leaves: int, k: int,
+              tb: int | None = None, tl: int | None = None,
+              n_cells: int | None = None) -> bool:
+    """True iff the resolved fused-kernel form fits the VMEM budget.
+
+    The estimate uses the *lane-padded* cell count — the kernel's
+    replicated bank operands are padded to the LANE quantum, and the pad
+    rows cost VMEM like any others (the sibling ``traverse_compact`` gate
+    pads its level widths for the same reason). ``n_cells`` overrides the
+    bank's cell count for callers asking about a *shard* of the bank."""
+    C, F, H = bank.w1.shape
+    C = n_cells or C
+    Cl = bank.w2.shape[-1]
+    interp = _interpret()
+    tb, tl, kc, _ = _mlp_tiles(B, n_leaves, C, Cl, interp, tb, tl)
+    kp = k if interp else \
+        (k + _traverse.LANE - 1) // _traverse.LANE * _traverse.LANE
+    Cp = C + (-C) % _traverse.LANE
+    return _mlp.vmem_estimate_mlp(Cp, F, H, Cl, S, tb, tl, kp,
+                                  tpu_form=not interp, kc=kc) \
+        <= _traverse.VMEM_BUDGET
+
+
+def mlp_fused_active(B: int, bank, S: int, n_leaves: int, k: int,
+                     n_cells: int | None = None) -> bool:
+    """Would ``mlp_predict_compact`` take the fused kernel path for this
+    shape? (False when kernels are off or the VMEM gate routes to the
+    dense oracle — callers reporting 'score table eliminated' must check
+    the actual dispatch, not just their own flags.) Pass the *per-shard*
+    ``B``/``n_cells``/``n_leaves`` when asking about the sharded engine —
+    its dispatch sees shard-local shapes."""
+    return kernels_enabled() and _mlp_gate(B, bank, S, n_leaves, k,
+                                           n_cells=n_cells)
+
+
+def mlp_predict_compact(queries: jnp.ndarray, bank, cell_ids: jnp.ndarray,
+                        slot_ok: jnp.ndarray, *, n_leaves: int, k: int,
+                        threshold: float, tb: int | None = None,
+                        tl: int | None = None
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused AI-path prediction: queries [B, 4] + cell routing → compact
+    predicted-leaf slots ``(leaf_idx [B, k] i32, valid [B, k] bool,
+    count [B] i32)``.
+
+    Semantically ``compact_mask_counted(predict_scores(...) > threshold,
+    k)``, but on the kernel path the ``[B, n_leaves]`` score table never
+    leaves VMEM: classifier inference, sigmoid+threshold, the
+    ``label_map`` scatter/max-union and the cumsum-rank compaction all run
+    inside one ``pallas_call`` (``kernels.mlp_infer``). ``bank`` is an
+    ``MLPBank``-shaped object (``w1/b1/w2/b2/mu/sd/label_map/lmask`` —
+    duck-typed so this module stays core-free); ``cell_ids``/``slot_ok``
+    [B, S] come from ``grid.cells_of_queries``. Requires ``threshold ≥ 0``
+    (see ``mlp_infer`` module docs).
+
+    Fallback ladder mirrors ``traverse_compact``: the jnp dense oracle
+    when kernels are off **or** when the form-aware VMEM estimate (bank
+    operands + staging transients + epilogue transient) exceeds the
+    budget — never a silent wrong answer, the fallbacks are bit-identical.
+    Tile knobs resolve explicit override → autotune cache entry for this
+    (form, B, L, C, Cl) shape → hand-picked default.
+    """
+    assert threshold >= 0, "dense-oracle parity requires threshold >= 0"
+    B = queries.shape[0]
+    S = cell_ids.shape[1]
+    C, F, H = bank.w1.shape
+    Cl = bank.w2.shape[-1]
+    x = (queries.astype(jnp.float32) - bank.mu) / bank.sd
+    cid = jnp.clip(cell_ids.astype(jnp.int32), 0, C - 1)
+
+    def dense():
+        return ref.mlp_predict_compact(
+            x, cid, slot_ok, bank.w1, bank.b1, bank.w2, bank.b2,
+            bank.label_map, bank.lmask, n_leaves=n_leaves, k=k,
+            threshold=threshold)
+
+    if not kernels_enabled() or not _mlp_gate(B, bank, S, n_leaves, k,
+                                              tb, tl):
+        return dense()
+    interp = _interpret()
+    tb, tl, kc, Lp = _mlp_tiles(B, n_leaves, C, Cl, interp, tb, tl)
+    xp = _pad_to(x, 0, tb, 0.0)
+    cidp = _pad_to(cid, 0, tb, 0)
+    okp = _pad_to(slot_ok.astype(jnp.int32), 0, tb, 0)
+    Cp = (-C) % _traverse.LANE
+    w1f = bank.w1.reshape(C, F * H)
+    w2f = bank.w2.reshape(C, H * Cl)
+    b1a, b2a = bank.b1, bank.b2
+    lm = bank.label_map.astype(jnp.float32)
+    lmk = bank.lmask.astype(jnp.float32)
+    if Cp:
+        w1f = _pad_to(w1f, 0, _traverse.LANE, 0.0)
+        w2f = _pad_to(w2f, 0, _traverse.LANE, 0.0)
+        b1a = _pad_to(b1a, 0, _traverse.LANE, 0.0)
+        b2a = _pad_to(b2a, 0, _traverse.LANE, 0.0)
+        lm = _pad_to(lm, 0, _traverse.LANE, -1.0)
+        lmk = _pad_to(lmk, 0, _traverse.LANE, 0.0)
+    lpt = Lp + (-Lp) % tl
+    idx, cnt = _mlp.mlp_predict_compact_t(
+        xp, cidp, okp, w1f, b1a, w2f, b2a, lm, lmk, k=k, lp=lpt,
+        thr=float(threshold), tb=tb, tl=tl, kc=kc, interpret=interp)
     count = cnt[:B, 0]
     valid = jnp.arange(k, dtype=jnp.int32)[None, :] < count[:, None]
     return jnp.where(valid, idx[:B, :k], 0), valid, count

@@ -68,6 +68,52 @@ def spatial_key(cxy: jnp.ndarray, curve: str = "hilbert",
     return d
 
 
+def mlp_predict_scores(x: jnp.ndarray, cell_ids: jnp.ndarray,
+                       slot_ok: jnp.ndarray, w1: jnp.ndarray,
+                       b1: jnp.ndarray, w2: jnp.ndarray, b2: jnp.ndarray,
+                       label_map: jnp.ndarray, lmask: jnp.ndarray,
+                       n_leaves: int) -> jnp.ndarray:
+    """Dense AI-path prediction ground truth: [B, F] → scores [B, n_leaves].
+
+    Gathered per-cell MLP forward (``cell_logits_for``'s contraction
+    order), sigmoid, and the ``global_scores`` max-union scatter over the
+    full leaf axis — the exact pipeline the fused kernel collapses.
+    """
+    B, S = cell_ids.shape
+    w1g = w1[cell_ids]                              # [B, S, F, H]
+    b1g = b1[cell_ids]
+    w2g = w2[cell_ids]                              # [B, S, H, Cl]
+    b2g = b2[cell_ids]
+    h = jnp.maximum(
+        jnp.einsum("bf,bsfh->bsh", x.astype(jnp.float32), w1g) + b1g, 0.0)
+    probs = jax.nn.sigmoid(jnp.einsum("bsh,bshl->bsl", h, w2g) + b2g)
+    lm = label_map[cell_ids]                        # [B, S, Cl]
+    ok = slot_ok[:, :, None] & lmask[cell_ids]
+    tgt = jnp.where(ok, lm, n_leaves)               # park invalid at L
+    Cl = lm.shape[-1]
+    flat_t = tgt.reshape(B, S * Cl)
+    flat_p = jnp.where(ok, probs, 0.0).reshape(B, S * Cl)
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    out = jnp.zeros((B, n_leaves + 1), probs.dtype)
+    out = out.at[rows, flat_t].max(flat_p)
+    return out[:, :n_leaves]
+
+
+def mlp_predict_compact(x: jnp.ndarray, cell_ids: jnp.ndarray,
+                        slot_ok: jnp.ndarray, w1: jnp.ndarray,
+                        b1: jnp.ndarray, w2: jnp.ndarray, b2: jnp.ndarray,
+                        label_map: jnp.ndarray, lmask: jnp.ndarray, *,
+                        n_leaves: int, k: int, threshold: float
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Ground truth for ``kernels.mlp_infer``: dense scores → threshold →
+    ``compact_mask_counted``. Returns ``(leaf_idx [B, k], valid, count)``.
+    """
+    from repro.core.traversal import compact_mask_counted
+    scores = mlp_predict_scores(x, cell_ids, slot_ok, w1, b1, w2, b2,
+                                label_map, lmask, n_leaves)
+    return compact_mask_counted(scores > threshold, k)
+
+
 def leaf_refine(queries: jnp.ndarray, ex: jnp.ndarray, ey: jnp.ndarray,
                 leaf_idx: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
     """queries [B,4], ex/ey [L,M], leaf_idx [B,K], valid [B,K] → [B,K,M]."""

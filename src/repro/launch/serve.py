@@ -30,35 +30,54 @@ from repro.data import synth
 
 
 def make_serve_fns(hyb, args, devices):
-    """(narrow_fn, wide_fn, trunc_field, ctx) for the streaming loop.
+    """(narrow_fn, wide_fn, trunc_field, ctx, ai_fused) for the loop.
 
     Distributed (>1 device and ``--distributed``): the shard_map engine's
     two-tier steps (overflow flag ``ServeStats.r_truncated``). Otherwise:
     jit'd ``hybrid_query`` with the same narrow/wide bound split (flag
     ``HybridResult.truncated``; the wide tier also widens ``max_results``
-    so its result-id gather cannot re-truncate).
+    so its result-id gather cannot re-truncate). ``ai_fused`` reports
+    whether the AI path's prediction actually dispatches the fused
+    kernel under *this* configuration — asked of the dispatch gate at
+    the shapes it will really see (per-shard for the engine), because
+    ``REPRO_KERNELS=off`` or the VMEM gate silently route to the dense
+    oracle even with ``--kernel``.
     """
+    from repro.kernels import ops as kops
+    want_fused = args.kernel and args.classifier == "mlp"
     if args.distributed and len(devices) > 1:
         n = len(devices)
         nd = max(1, n // 2)
-        mesh = jax.make_mesh((nd, n // nd), ("data", "model"))
-        hyb_s = engine.pad_tree_for_sharding(hyb, n // nd)
-        cfg = engine.EngineConfig(max_visited=args.max_visited)
+        n_model = n // nd
+        mesh = jax.make_mesh((nd, n_model), ("data", "model"))
+        hyb_s = engine.pad_tree_for_sharding(hyb, n_model)
+        cfg = engine.EngineConfig(max_visited=args.max_visited,
+                                  use_kernel=args.kernel)
         narrow, wide = engine.make_two_tier_steps(
             mesh, cfg, kind=args.classifier, wide_factor=args.wide_factor)
         ctx = pmesh.set_mesh(mesh)
+        fused = want_fused and cfg.score_union == "topk" and \
+            kops.mlp_fused_active(
+                args.batch // nd, hyb_s.ait.bank, cfg.max_cells,
+                hyb_s.tree.n_leaves, cfg.max_pred,
+                n_cells=hyb_s.ait.bank.w1.shape[0] // n_model)
         # jit once per tier — the stream re-enters the step per batch
         return (jax.jit(lambda q: narrow(hyb_s, q)),
-                jax.jit(lambda q: wide(hyb_s, q)), "r_truncated", ctx)
+                jax.jit(lambda q: wide(hyb_s, q)), "r_truncated", ctx,
+                fused)
 
     import contextlib
     mv, mr = args.max_visited, 512
     narrow = jax.jit(lambda q: hybrid_query(hyb, q, max_visited=mv,
-                                            max_results=mr))
+                                            max_results=mr,
+                                            use_kernel=args.kernel))
     wide = jax.jit(lambda q: hybrid_query(
         hyb, q, max_visited=mv * args.wide_factor,
-        max_results=mr * args.wide_factor))
-    return narrow, wide, "truncated", contextlib.nullcontext()
+        max_results=mr * args.wide_factor, use_kernel=args.kernel))
+    fused = want_fused and kops.mlp_fused_active(
+        args.batch, hyb.ait.bank, hyb.ait.max_cells,
+        hyb.tree.n_leaves, hyb.ait.max_pred)
+    return narrow, wide, "truncated", contextlib.nullcontext(), fused
 
 
 def main() -> None:
@@ -80,6 +99,10 @@ def main() -> None:
     p.add_argument("--max-visited", type=int, default=64,
                    help="narrow-tier R-path bound (overflow re-serves wide)")
     p.add_argument("--wide-factor", type=int, default=8)
+    p.add_argument("--kernel", action="store_true",
+                   help="serve through the Pallas kernel paths (fused "
+                        "traversal/compaction; with --classifier mlp also "
+                        "the fused prediction kernel)")
     p.add_argument("--distributed", action="store_true",
                    help="serve through the shard_map engine")
     args = p.parse_args()
@@ -105,7 +128,7 @@ def main() -> None:
           f"router test acc {rep.router.test_acc:.3f}, "
           f"models {rep.model_bytes/1e6:.2f} MB")
 
-    narrow_fn, wide_fn, trunc_field, ctx = make_serve_fns(
+    narrow_fn, wide_fn, trunc_field, ctx, ai_fused = make_serve_fns(
         hyb, args, jax.devices())
     bbox = schedule.workload_bbox(wl.queries)
     with ctx:
@@ -130,6 +153,21 @@ def main() -> None:
     print(f"# serve: {report.n_queries/dt_s:.0f} queries/s, "
           f"{acc:.2f} leaf accesses/query, "
           f"{100*ai:.1f}% answered by the AI path")
+    # AI-path fusion accounting: with the fused prediction kernel (mlp
+    # bank + --kernel) prediction flows through the compact [B, max_pred]
+    # slot table and the dense [B, L] score table never materializes;
+    # every other configuration still runs the dense-oracle rung, so
+    # report the saving only when it actually happened.
+    k = hyb.ait.max_pred
+    dense_b = report.n_queries * dtree.n_leaves * 4
+    slot_b = report.n_queries * (k + 1) * 4
+    verdict = ("eliminated" if ai_fused else
+               "still materialized on this config — fused path needs "
+               "--classifier mlp --kernel (and the kernel dispatch "
+               "active)")
+    print(f"# AI path: {slot_b/1e3:.0f} KB compact slot tables; "
+          f"{dense_b/1e6:.1f} MB dense [B, {dtree.n_leaves}] score tables "
+          f"{verdict}")
     # no-drop oracle: the labelling pass already executed every query
     mism = int(np.sum(np.asarray(st.n_results) != wl.n_results))
     print(f"# oracle: {mism} / {report.n_queries} n_results mismatches "

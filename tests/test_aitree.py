@@ -155,6 +155,25 @@ def test_workload_alpha_buckets(world):
     assert ((wl.alpha <= 0.75) == hi).all()
 
 
+def test_router_feature_parity():
+    """The trainer's numpy features and the device path's jnp features are
+    the same function — ``router_features`` is a host wrapper over the
+    shared ``router_features_jnp`` (they used to be two inline copies)."""
+    from repro.core.classifiers.router import (router_features,
+                                               router_features_jnp)
+    rng = np.random.default_rng(12)
+    lo = rng.uniform(-5, 5, (200, 2))
+    w = rng.uniform(0, 3, (200, 2))
+    q = np.concatenate([lo, lo + w], axis=1).astype(np.float32)
+    host = router_features(q)
+    dev = np.asarray(router_features_jnp(jnp.asarray(q)))
+    assert host.shape == (200, 6)
+    np.testing.assert_array_equal(host, dev)
+    # the feature semantics the router was trained on: corners + w/h
+    np.testing.assert_allclose(host[:, 4], q[:, 2] - q[:, 0], rtol=1e-6)
+    np.testing.assert_allclose(host[:, 5], q[:, 3] - q[:, 1], rtol=1e-6)
+
+
 def test_celldata_label_maps_are_consistent(world):
     _, dtree, wl, hyb, _ = world
     g = hyb.ait.grid
