@@ -22,9 +22,12 @@ bench-smoke:
 
 # Toy-scale run of both user-facing examples (they are living docs — the
 # fast CI job executes them so the documented API path can't silently rot).
+# spatial_serve runs twice: the read-only stream and the freshness demo
+# (--insert-rate: delta-buffer serving + guard + online repack).
 examples-smoke:
 	PYTHONPATH=$(PYTHONPATH) python examples/quickstart.py --points 4000 --queries 300
 	PYTHONPATH=$(PYTHONPATH) python examples/spatial_serve.py --points 4000 --batches 2 --batch-size 128 --train-queries 400
+	PYTHONPATH=$(PYTHONPATH) python examples/spatial_serve.py --points 4000 --batches 4 --batch-size 128 --train-queries 400 --insert-rate 0.05 --repack-every 150
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json BENCH_engine.json

@@ -194,6 +194,65 @@ def sweep_mlp_shape(B: int, L: int, g: int, Cl: int, k: int, quick: bool,
     return key, entry
 
 
+def sweep_delta_shape(B: int, cap: int, k: int, quick: bool,
+                      rows: list) -> tuple[str, dict]:
+    """Knob sweep for the delta-probe kernel (``delta_probe``).
+
+    Same protocol as the other sweeps: every candidate is gated
+    bit-identical to the current-dispatch output before it is timed;
+    winners land under the ``delta-`` form keys ``ops.delta_probe``
+    consults. The buffer is probed half-full — the kernel cost is
+    capacity-shaped, not fill-shaped, and half-full exercises both live
+    and all-padding tiles.
+    """
+    from repro.kernels import delta_probe as dpk
+
+    rng = np.random.default_rng(0)
+    interp = jax.default_backend() != "tpu"
+    qs = _workloads(B, rng)
+    pts = np.full((cap, 2), np.inf, np.float32)
+    pts[:cap // 2] = rng.uniform(-1, 1, (cap // 2, 2))
+    pts = jnp.asarray(pts)
+
+    def run(cand, q):
+        return ops.delta_probe(q, pts, k=k, tb=cand["tb"], tn=cand["tn"])
+
+    Np = (max(128, cap) + 127) // 128 * 128
+    dtb, dtn, _ = ops._delta_tiles(B, cap, interp)
+    default = {"tb": dtb, "tn": dtn}
+    if interp:
+        cands = [{"tb": tb, "tn": Np}
+                 for tb in ([min(1024, B), 128] if not quick
+                            else [min(1024, B)])]
+    else:
+        cands = [{"tb": tb, "tn": tn}
+                 for tb in (128, 256, 512)
+                 for tn in sorted({min(t, Np) for t in (256, 512, 1024)})]
+    if default not in cands:
+        cands.insert(0, default)
+    ref_out = [jax.tree.map(np.asarray, run(default, q)) for q in qs]
+
+    best, best_t, default_t = None, np.inf, None
+    for cand in cands:
+        for q, ro in zip(qs, ref_out):
+            co = jax.tree.map(np.asarray, run(cand, q))
+            for c, r in zip(co, ro):
+                np.testing.assert_array_equal(c, r)
+        t = sum(_med_time(lambda q=q: run(cand, q)) for q in qs)
+        if cand == default:
+            default_t = t
+        if t < best_t:
+            best, best_t = dict(cand), t
+    key = dpk.tune_key_delta(B, cap, interp)
+    # the cache's lane-axis knob is named ``tl`` across kernel families
+    entry = {"tb": best["tb"], "tl": best["tn"], "us": best_t * 1e6,
+             "default_us": default_t * 1e6}
+    rows.append((f"autotune_{key}_us", best_t * 1e6,
+                 f"default_us={default_t * 1e6:.0f},"
+                 f"tiles=tb{best['tb']}tn{best['tn']}"))
+    return key, entry
+
+
 def main(argv=None) -> list:
     p = argparse.ArgumentParser()
     p.add_argument("--out", default=tf.autotune_cache_path(),
@@ -221,6 +280,9 @@ def main(argv=None) -> list:
         cache[key] = entry
         print(f"{key}: {entry}")
     key, entry = sweep_mlp_shape(256, 2048, 4, 32, args.k, args.quick, rows)
+    cache[key] = entry
+    print(f"{key}: {entry}")
+    key, entry = sweep_delta_shape(256, 4096, args.k, args.quick, rows)
     cache[key] = entry
     print(f"{key}: {entry}")
     with open(args.out, "w") as f:

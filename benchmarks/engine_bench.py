@@ -399,6 +399,119 @@ def scheduler_bench(rows: list, Q: int = 2048, batch: int = 256,
                      f"{Q / t / 1e6:.2f}Mkeys/s"))
 
 
+def _fresh_world(n_points: int, n_ins: int, n_queries: int, seed: int = 0):
+    """Toy mixed read/write world: STR base tree + held-out inserts."""
+    from repro.core import build as buildlib
+    pts = synth.tweets_like(n_points + n_ins, seed=seed)
+    base, extra = pts[:n_points], pts[n_points:]
+    dtree = dt.flatten(RTree.str_bulk(base, max_entries=32))
+    qs = synth.synth_queries(pts, 2e-4, n_queries, seed=seed + 1)
+    wl = labels.make_workload(dtree, qs)
+    hyb, _ = buildlib.fit_airtree(dtree, wl, kind="knn", grid_sizes=(6,))
+    return base, extra, dtree, wl, hyb
+
+
+def freshness_bench(rows: list, n_points: int = 30_000, n_ins: int = 2048,
+                    batch: int = 256) -> None:
+    """Freshness subsystem costs: delta-probe vs buffer fill, staging,
+    online repack, and the serving overhead of the delta stage
+    (``update_*`` rows; see EXPERIMENTS.md "Freshness")."""
+    from repro.core import delta as deltalib
+    from repro.core.monitor import FreshServer
+    from repro.kernels import ops
+
+    base, extra, dtree, wl, hyb = _fresh_world(n_points, n_ins, 2000)
+    q = jnp.asarray(wl.queries[:batch])
+
+    # probe cost vs buffer fill (the [B, cap] mask never leaves VMEM; the
+    # cost is capacity-shaped, not fill-shaped — rows document that)
+    cap = n_ins
+    for fill in (0, cap // 4, cap):
+        store = deltalib.make_delta(cap, base=n_points)
+        if fill:
+            store = deltalib.stage_inserts(store, extra[:fill])
+        t = _med_time(lambda s=store: ops.delta_probe(q, s.xy, k=64))
+        rows.append((f"update_probe_B{batch}xN{cap}_fill{fill}_us", t * 1e6,
+                     f"{batch / t / 1e3:.0f}kprobes/s"))
+
+    # staging throughput (host append + device swap, between batches)
+    def stage():
+        deltalib.stage_inserts(deltalib.make_delta(cap, base=n_points),
+                               extra)
+        return jnp.zeros(())
+    t = _med_time(stage, reps=7)
+    rows.append((f"update_stage_{n_ins}_us", t * 1e6,
+                 f"{n_ins / t / 1e3:.0f}kpts/s"))
+
+    # online repack: bulk reload + flatten of base+staged
+    store = deltalib.stage_inserts(
+        deltalib.make_delta(cap, base=n_points), extra)
+
+    def do_repack():
+        deltalib.repack(base, store, max_entries=32)
+        return jnp.zeros(())
+    t = _med_time(do_repack, reps=3)
+    rows.append((f"update_repack_{n_points + n_ins}_us", t * 1e6,
+                 f"{(n_points + n_ins) / t / 1e6:.2f}Mpts/s"))
+
+    # serving overhead of the freshness stage: FreshServer (probe + merge
+    # + guard) vs the plain read-only hybrid, interleaved timing
+    srv = FreshServer(base, hyb, delta_cap=cap, max_visited=128,
+                      max_results=512)
+    srv.insert(extra[:cap // 2])
+    ro = jax.jit(lambda qq: hybrid_query(hyb, qq, max_visited=128))
+    tf_, tr = _med_time_pair(lambda: srv.serve(q), lambda: ro(q))
+    rows.append((f"update_serve_B{batch}_us", tf_ * 1e6,
+                 f"readonly_us={tr * 1e6:.0f},overhead="
+                 f"{(tf_ / tr - 1) * 100:.0f}%,qps={batch / tf_:.0f}"))
+
+
+def freshness_smoke(rows: list) -> None:
+    """Toy mixed read/write gate (``make bench-smoke`` / CI): stream
+    queries with inserts interleaved and a mid-stream repack, then
+    *assert* delta-serving ≡ the from-scratch rebuild oracle — result
+    counts per segment against exactly the points visible to it, and the
+    post-repack serve bit-identical to a fresh bulk load."""
+    import dataclasses
+
+    from repro.core import delta as deltalib, schedule
+    from repro.core.monitor import FreshServer
+
+    base, extra, dtree, wl, hyb = _fresh_world(6000, 600, 300)
+    srv = FreshServer(base, hyb, delta_cap=1024, max_visited=128,
+                      max_results=512)
+    t0 = time.time()
+    mixed = schedule.serve_mixed_workload(
+        srv, wl.queries, extra, batch=64, sort="hilbert", insert_every=1,
+        repack_every=400)
+    dt_s = time.time() - t0
+    assert mixed.n_repacks >= 1, "gate must exercise the online repack"
+    # per-segment rebuild oracle: n_results over the visible point set
+    # (schedule.visible_segments — the scheduler's actual staging)
+    from repro.core import geometry as geo
+    got = np.asarray(mixed.stats.n_results)
+    for (lo, hi), visible in schedule.visible_segments(mixed, base):
+        exp = geo.np_contains_point(
+            wl.queries[lo:hi][:, None, :], visible[None, :, :]).sum(axis=1)
+        np.testing.assert_array_equal(got[lo:hi], exp,
+                                      err_msg=f"segment {lo}:{hi}")
+    # repack ≡ rebuild: the swapped tree is bit-identical to a fresh
+    # bulk load of the same points, so serving it must be too
+    srv.repack()
+    rebuilt = dt.flatten(RTree.str_bulk(srv.points, max_entries=32))
+    hyb2 = dataclasses.replace(srv.hybrid, tree=rebuilt)
+    q = jnp.asarray(wl.queries[:64])
+    a = srv.serve(q)
+    b = hybrid_query(hyb2, q, max_visited=128, max_results=512)
+    for f in type(b)._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"repack vs rebuild: {f}")
+    rows.append(("update_smoke_stream_us", dt_s * 1e6,
+                 f"{mixed.n_queries}q/{mixed.n_inserts}ins/"
+                 f"{mixed.n_repacks}repack,oracle=exact"))
+
+
 def kernel_micro(rows: list) -> None:
     from repro.kernels import ops
     rng = np.random.default_rng(0)
@@ -445,6 +558,8 @@ def main(quick: bool = False) -> list:
     traversal_micro(rows)
     compaction_micro(rows)
     ai_fusion_micro(rows)
+    freshness_bench(rows, n_points=10_000 if quick else 30_000,
+                    n_ins=1024 if quick else 2048)
     if not quick:
         # the quick (CI fast-job) run skips this section: the same job
         # already runs it via the dedicated `make bench-smoke` gate
@@ -456,15 +571,16 @@ def main(quick: bool = False) -> list:
 
 
 def smoke() -> list:
-    """Toy-scale scheduler benchmark only (the ``make bench-smoke`` / CI
-    fast-job gate): exercises the full streaming loop — key kernel, sorted
-    batch formation, ragged tail, inverse permutation — and *asserts* the
-    sorted streams are bit-identical to unsorted, so the serving loop
-    cannot silently rot between full benchmark runs."""
+    """Toy-scale gates only (the ``make bench-smoke`` / CI fast-job):
+    the scheduler streaming loop (asserts sorted ≡ unsorted, so the
+    serving loop cannot silently rot) and the mixed read/write freshness
+    gate (asserts delta-serving ≡ the from-scratch rebuild oracle and
+    repack ≡ rebuild)."""
     rows: list = []
     # Q deliberately not a multiple of batch: the gate must exercise the
     # ragged tail's pad-and-drop path, not just full batches
     scheduler_bench(rows, Q=400, batch=128, L=2048, check=True)
+    freshness_smoke(rows)
     for name, val, extra in rows:
         print(f"{name},{val:.2f},{extra}")
     return rows

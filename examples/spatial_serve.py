@@ -26,10 +26,18 @@ parser.add_argument("--batches", type=int, default=20)
 parser.add_argument("--batch-size", type=int, default=512)
 parser.add_argument("--train-queries", type=int, default=3000,
                     help="training queries per selectivity bucket")
+parser.add_argument("--insert-rate", type=float, default=0.0,
+                    help="fraction of points arriving as dynamic inserts "
+                         "during the stream (freshness subsystem demo)")
+parser.add_argument("--repack-every", type=int, default=0,
+                    help="online repack once this many inserts are staged")
 parser.add_argument("--distributed", action="store_true")
 args = parser.parse_args()
 
-points = synth.tweets_like(args.points, seed=0)
+all_points = synth.tweets_like(args.points, seed=0)
+n_ins = int(round(args.insert_rate * args.points))
+points = all_points[:-n_ins] if n_ins else all_points
+inserts = all_points[-n_ins:] if n_ins else None
 tree = RTree(max_entries=128).insert_all(points)
 dtree = device_tree.flatten(tree)
 
@@ -45,6 +53,35 @@ print(f"# fitted: grid {report.grid_size}², fit {report.exact_fit:.3f}, "
 # serving stream: same workload distribution, shuffled into batches
 rng = np.random.default_rng(1)
 order = rng.permutation(workload.n_queries)
+
+if inserts is not None:
+    # Freshness demo: a mixed read/write stream through the scheduler.
+    # Inserts land in the device-side delta buffer between query
+    # segments (every query probes it), the guard demotes stale cells to
+    # the exact R path, and the online repack folds the buffer into a
+    # fresh bulk-loaded tree mid-stream.
+    from repro.core import schedule
+    from repro.core.monitor import FreshServer
+    server = FreshServer(points, hybrid, delta_cap=max(64, n_ins),
+                         max_visited=256, max_results=1024)
+    stream = workload.queries[
+        np.resize(order, args.batches * args.batch_size)]
+    t0 = time.time()
+    mixed = schedule.serve_mixed_workload(
+        server, stream, inserts, batch=args.batch_size, sort="none",
+        insert_every=1, repack_every=args.repack_every)
+    dt = time.time() - t0
+    fs = server.stats()
+    print(f"# stream: {mixed.n_queries/dt:8.0f} q/s | "
+          f"{int(np.asarray(mixed.stats.delta_hits).sum())} delta hits | "
+          f"{100*np.asarray(mixed.stats.guarded).mean():.1f}% "
+          f"guard-demoted | delta fill {fs.delta_fill} | "
+          f"{fs.ok_cells}/{fs.n_cells} cells eligible")
+    print(f"# total: {mixed.n_queries} queries served fresh over "
+          f"{mixed.n_inserts} dynamic inserts, {mixed.n_repacks} online "
+          f"repacks")
+    raise SystemExit(0)
+
 step = None
 if args.distributed and len(jax.devices()) > 1:
     n = len(jax.devices())

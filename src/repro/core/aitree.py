@@ -34,6 +34,15 @@ from repro.core import traversal
 class AITree:
     grid: Grid
     bank: Union[MLPBank, Forest, KNNBank]
+    # Per-cell serve-eligibility guard: cell ``c``'s model may answer on
+    # the AI path iff ``cell_ok[c]``. ``build.fit_airtree`` sets it from
+    # the per-cell exact-fit flags (a cell whose training queries were
+    # not all answered exactly can under-predict *silently* — the
+    # blind-spot ROADMAP documented); the freshness monitor further
+    # clears cells that received inserts since the bank was fit. Queries
+    # overlapping any not-ok cell are demoted to the exact R path by the
+    # hybrid/engine routing (see ``hybrid_query`` / ``engine._ai_path``).
+    cell_ok: jnp.ndarray
     # ``kind`` names the bank family and selects the inference path:
     # "mlp" (MLPBank, the TPU-native stacked experts — the only kind with a
     # fused prediction kernel), "forest" (Forest, paper-faithful oblivious
@@ -44,11 +53,25 @@ class AITree:
     threshold: float = dataclasses.field(metadata=dict(static=True))
 
 
+def bank_n_cells(bank) -> int:
+    """Cell count of any bank family (the guard/label leading axis)."""
+    if isinstance(bank, KNNBank):
+        return bank.feats.shape[0]
+    if isinstance(bank, MLPBank):
+        return bank.w1.shape[0]
+    return bank.feat_idx.shape[0]
+
+
 def make_aitree(grid: Grid, bank, *, max_cells: int = 4, max_pred: int = 64,
-                threshold: float = 0.5) -> AITree:
+                threshold: float = 0.5, cell_ok=None) -> AITree:
     kind = {MLPBank: "mlp", Forest: "forest", KNNBank: "knn"}[type(bank)]
-    return AITree(grid=grid, bank=bank, kind=kind, max_cells=max_cells,
-                  max_pred=max_pred, threshold=threshold)
+    if cell_ok is None:
+        # all-eligible default keeps hand-built trees' dispatch unchanged;
+        # fit_airtree installs the real per-cell fit flags
+        cell_ok = jnp.ones((bank_n_cells(bank),), jnp.bool_)
+    return AITree(grid=grid, bank=bank, cell_ok=jnp.asarray(cell_ok),
+                  kind=kind, max_cells=max_cells, max_pred=max_pred,
+                  threshold=threshold)
 
 
 def cell_slot_probs(ait: AITree, queries: jnp.ndarray,

@@ -35,15 +35,22 @@ class BuildReport:
     router_bytes: int
     router: RouterReport
     train_seconds: float
+    # Per-cell exact-fit flags of the winning grid ([C] bool): cell c is
+    # flagged iff ≥ 1 training query touched it and every touching query
+    # was answered exactly. Wired into ``AITree.cell_ok`` so serving can
+    # guard sub-1.0-fit cells off the AI path (the under-prediction
+    # blind-spot fix); the freshness monitor ANDs its staleness on top.
+    cell_fit: Optional[np.ndarray] = None
 
 
 def _eval_exact_fit(ait, dtree: DeviceTree, wl: labels.Workload,
-                    batch: int = 256) -> float:
+                    batch: int = 256) -> tuple[float, np.ndarray]:
     """Fraction of workload queries the AI path answers without fallback AND
-    with exactly the true leaf set accessed."""
+    with exactly the true leaf set accessed, plus the per-query exactness
+    vector ([Q] bool) the per-cell fit flags are derived from."""
     import jax.numpy as jnp
     from repro.core.aitree import ai_query
-    ok = 0
+    exact = np.zeros((wl.n_queries,), bool)
     Q = wl.n_queries
     for o in range(0, Q, batch):
         q = wl.queries[o:o + batch]
@@ -55,8 +62,39 @@ def _eval_exact_fit(ait, dtree: DeviceTree, wl: labels.Workload,
         pred = np.asarray(res.pred_mask)[:take]
         fb = np.asarray(res.fallback)[:take]
         tgt = wl.true_labels[o:o + take]
-        ok += int(np.sum(~fb & np.all(pred == tgt, axis=1)))
-    return ok / Q
+        exact[o:o + take] = ~fb & np.all(pred == tgt, axis=1)
+    return float(exact.mean()), exact
+
+
+def cell_fit_flags(grid, queries: np.ndarray, exact: np.ndarray,
+                   max_cells: int, n_cells: int) -> np.ndarray:
+    """Per-cell exact-fit flags: [C] bool from per-query exactness.
+
+    A cell is serve-eligible iff at least one training query touched it
+    and *every* touching query was exact — an untouched cell's model saw
+    no data (its predictions are no better than noise) and a cell with
+    any inexact query can silently under-predict, so both are guarded.
+    Overflowed queries (wider than the static cell window) touch no valid
+    cell and so constrain nothing — they always fall back at serving too.
+    """
+    ids, valid, _ = gridlib.bucket_queries_by_cell(grid, queries, max_cells)
+    touched = np.zeros((n_cells,), bool)
+    bad = np.zeros((n_cells,), bool)
+    touched[ids[valid]] = True
+    bad[ids[valid & ~exact[:, None]]] = True
+    return touched & ~bad
+
+
+def eval_cell_fit(ait, dtree: DeviceTree, wl: labels.Workload,
+                  batch: int = 256) -> tuple[float, np.ndarray, np.ndarray]:
+    """Public fit evaluation: ``(exact_fit, exact [Q] bool, cell_ok [C]
+    bool)`` for an assembled AI-tree — what ``fit_airtree`` installs, and
+    what a refit after drift/repack recomputes (see ``core.monitor``)."""
+    from repro.core.aitree import bank_n_cells
+    fit, exact = _eval_exact_fit(ait, dtree, wl, batch=batch)
+    cell_ok = cell_fit_flags(ait.grid, wl.queries, exact, ait.max_cells,
+                             bank_n_cells(ait.bank))
+    return fit, exact, cell_ok
 
 
 def fit_airtree(dtree: DeviceTree, workload: labels.Workload, *,
@@ -88,16 +126,25 @@ def fit_airtree(dtree: DeviceTree, workload: labels.Workload, *,
                 n_trees=forest_trees, depth=forest_depth, seed=seed)
         nbytes = bank.byte_size()
         ait = make_aitree(gr, bank, max_cells=max_cells, max_pred=max_pred)
-        fit = _eval_exact_fit(ait, dtree, workload)
+        fit, exact = _eval_exact_fit(ait, dtree, workload)
         tried.append((g, round(fit, 4)))
         if verbose:
             print(f"  grid {g}x{g}: exact-fit {fit:.4f} "
                   f"({ds.n_cells_used} cells, {nbytes/1e6:.2f} MB)")
         if best is None or fit > best[0]:
-            best = (fit, g, ait, nbytes, ds.n_cells_used)
+            best = (fit, g, ait, nbytes, ds.n_cells_used, exact)
         if fit >= target_fit:
             break
-    fit, g, ait, nbytes, cells = best
+    fit, g, ait, nbytes, cells, exact = best
+    # wire the winning grid's per-cell fit into the serving guard: cells
+    # whose training queries were not all exact (or that saw no training
+    # query) must not reach the ungated AI path — a sub-1.0 fit deployed
+    # without this silently drops results (the under-prediction blind spot)
+    import jax.numpy as jnp
+    from repro.core.aitree import bank_n_cells
+    cell_ok = cell_fit_flags(ait.grid, workload.queries, exact, max_cells,
+                             bank_n_cells(ait.bank))
+    ait = dataclasses.replace(ait, cell_ok=jnp.asarray(cell_ok))
 
     # §V-C2: the router is trained to GENERALIZE over the combined-α workload
     rwl = router_workload if router_workload is not None else workload
@@ -107,5 +154,5 @@ def fit_airtree(dtree: DeviceTree, workload: labels.Workload, *,
         grid_sizes_tried=tried, grid_size=g, exact_fit=fit,
         classifier_kind=kind, cells_trained=cells, model_bytes=nbytes,
         router_bytes=router.byte_size(), router=rrep,
-        train_seconds=time.time() - t0)
+        train_seconds=time.time() - t0, cell_fit=cell_ok)
     return hybrid, report

@@ -1,0 +1,163 @@
+"""Device-side insert delta store: dynamic inserts without a rebuild.
+
+The paper's structure is strictly static — the R-tree is bulk-built once
+and the AI-tree is overfit to a fixed workload — so a single insert used
+to mean a stop-the-world rebuild. This module absorbs inserts into a
+fixed-capacity append-only point buffer that serves *alongside* the tree:
+
+* ``stage_inserts`` appends points host-side (the buffer's device form is
+  swapped between batches, never mutated under a jit'd step);
+* every query batch probes the buffer (``probe`` → ``ops.delta_probe``,
+  the Pallas kernel with the compact slot-table contract) and merges the
+  hits into its results (``merge_hybrid_result``) — staged points are
+  invisible to both the R and AI paths until then;
+* ``repack`` merges the buffer into a fresh ``RTree.str_bulk`` →
+  ``DeviceTree`` and returns an empty store, so the scheduler can swap
+  the tree between batches (the online repack).
+
+ID convention: the point staged into buffer slot ``j`` has global id
+``base + j`` where ``base`` is the number of points already in the tree.
+``repack`` appends the staged points to the base point array in slot
+order, so ``RTree.str_bulk`` assigns exactly those ids — serving with a
+populated buffer is bit-identical (result ids included) to serving a
+from-scratch bulk load of the same points, which is the subsystem's
+correctness anchor (property-tested in ``tests/test_delta.py``).
+
+Unstaged capacity holds +inf coordinates: closed-rect containment fails
+on them, so neither the kernel nor the oracle ever needs the staged
+count to mask the buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.device_tree import DeviceTree, flatten
+from repro.core.rtree import RTree
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaStore:
+    """Host-managed append-only insert buffer (functional updates).
+
+    Not a jax pytree: the serve step takes ``xy`` (the device form)
+    directly and the host fields drive staging/repack decisions.
+    """
+    capacity: int
+    base: int            # global id of buffer slot 0 (= points in tree)
+    n: int               # staged inserts
+    xy: jnp.ndarray      # [capacity, 2] f32, +inf past ``n``
+
+    @property
+    def fill(self) -> float:
+        return self.n / max(self.capacity, 1)
+
+
+def make_delta(capacity: int, base: int = 0) -> DeltaStore:
+    if capacity < 1:
+        raise ValueError(f"delta capacity must be >= 1, got {capacity}")
+    xy = jnp.full((capacity, 2), jnp.inf, jnp.float32)
+    return DeltaStore(capacity=int(capacity), base=int(base), n=0, xy=xy)
+
+
+def stage_inserts(store: DeltaStore, points: np.ndarray) -> DeltaStore:
+    """Append ``points`` [m, 2]; the staged point ids continue the tree's
+    numbering (``store.base + slot``). Raises when the buffer would
+    overflow — callers repack before that (``FreshServer`` enforces it).
+    """
+    pts = np.asarray(points, np.float32).reshape(-1, 2)
+    m = pts.shape[0]
+    if m == 0:
+        return store
+    if store.n + m > store.capacity:
+        raise ValueError(
+            f"delta store overflow: {store.n} staged + {m} new > capacity "
+            f"{store.capacity} — repack first")
+    xy = np.asarray(store.xy).copy()
+    xy[store.n:store.n + m] = pts
+    return dataclasses.replace(store, n=store.n + m, xy=jnp.asarray(xy))
+
+
+def staged_points(store: DeltaStore) -> np.ndarray:
+    """The staged inserts as a host array [n, 2] f64 (builder dtype)."""
+    return np.asarray(store.xy)[:store.n].astype(np.float64)
+
+
+class DeltaHits(NamedTuple):
+    """Per-query probe result over one batch."""
+    slot_idx: jnp.ndarray   # [B, k] i32 buffer slots (insertion order)
+    valid: jnp.ndarray      # [B, k] bool slot validity
+    count: jnp.ndarray      # [B] i32 full hit total (exact past k)
+    ids: jnp.ndarray        # [B, k] i32 global point ids, -1 invalid
+
+
+def probe(store_xy: jnp.ndarray, queries: jnp.ndarray, *, k: int,
+          base: int, use_kernel: bool = False) -> DeltaHits:
+    """Probe the buffer for a query batch: [B, 4] → ``DeltaHits``.
+
+    ``use_kernel`` routes through ``ops.delta_probe`` (compact slot table
+    straight from VMEM, with its fallback ladder); the jnp oracle rung is
+    bit-identical. ``count`` is the full per-row hit total, so result
+    counts stay exact even when the slot table overflows ``k``.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        slot_idx, valid, count = kops.delta_probe(queries, store_xy, k=k)
+    else:
+        from repro.kernels import ref as kref
+        slot_idx, valid, count = kref.delta_probe(queries, store_xy, k)
+    ids = jnp.where(valid, base + slot_idx, -1)
+    return DeltaHits(slot_idx=slot_idx, valid=valid, count=count, ids=ids)
+
+
+def merge_hybrid_result(res, hits: DeltaHits):
+    """Fold delta hits into a ``HybridResult``: counts add exactly, hit
+    ids land in the result table's -1 padding (after the tree's ids, up
+    to the table's own width), and rows whose merged ids no longer fit
+    raise ``truncated`` so the scheduler's wide tier re-serves them.
+    ``leaf_accesses`` is untouched — the probe is O(capacity) VPU work,
+    not tree I/O (the paper's cost unit); the launch driver reports probe
+    cost separately.
+    """
+    B, k = hits.ids.shape
+    mr = res.result_ids.shape[1]
+    pos = res.n_results[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+    ok = hits.valid & (pos < mr)
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    out = jnp.concatenate(
+        [res.result_ids, jnp.full((B, 1), -1, jnp.int32)], axis=1)
+    out = out.at[rows, jnp.where(ok, pos, mr)].set(
+        jnp.where(ok, hits.ids, -1))
+    over = (hits.count > k) | (res.n_results + hits.count > mr)
+    return res._replace(
+        n_results=res.n_results + hits.count,
+        result_ids=out[:, :mr],
+        truncated=res.truncated | over)
+
+
+def repack(base_points: np.ndarray, store: DeltaStore, *,
+           max_entries: int, min_entries: int | None = None,
+           fill: float = 0.7
+           ) -> Tuple[RTree, DeviceTree, np.ndarray, DeltaStore]:
+    """Online repack: merge the buffer into a fresh ``str_bulk`` tree.
+
+    Returns ``(host_tree, device_tree, all_points, empty_store)`` — the
+    caller (the scheduler / ``FreshServer``) swaps the device tree in
+    between batches and carries ``all_points`` as the next repack's base.
+    Point ids are preserved: the staged points are appended to
+    ``base_points`` in slot order, so the rebuilt tree numbers them
+    exactly as the probe path already reported them.
+    """
+    pts = np.asarray(base_points, np.float64)
+    if pts.shape[0] != store.base:
+        raise ValueError(
+            f"repack id contract broken: {pts.shape[0]} base points but "
+            f"store.base={store.base}")
+    allp = np.concatenate([pts, staged_points(store)], axis=0)
+    tree = RTree.str_bulk(allp, max_entries=max_entries,
+                          min_entries=min_entries, fill=fill)
+    return (tree, flatten(tree), allp,
+            make_delta(store.capacity, base=allp.shape[0]))

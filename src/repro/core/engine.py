@@ -66,6 +66,17 @@ class EngineConfig:
     # 2-3.4× faster at every swept shard count and scaling away from pmax
     # past 4 shards (benchmarks/union_scaling.py, union_* rows).
     score_union: str = "topk"
+    # Freshness guard: demote queries overlapping a not-ok cell
+    # (``AITree.cell_ok`` — under-fit at build time or stale since inserts
+    # landed there) to the exact R path before prediction. Default ON: a
+    # sub-1.0-fit bank on the ungated AI path silently drops results (the
+    # under-prediction blind spot); exact-fit, fresh banks are unaffected
+    # (their cell_ok is all-True and the guard never fires).
+    guard: bool = True
+    # Delta-probe compact slot bound (the insert buffer's per-query hit
+    # table). The engine only consumes the exact per-query hit *count*, so
+    # this bounds kernel-side slot work, never correctness.
+    delta_k: int = 64
 
 
 def pad_tree_for_sharding(h: HybridTree, n_shards: int) -> HybridTree:
@@ -100,11 +111,11 @@ def pad_tree_for_sharding(h: HybridTree, n_shards: int) -> HybridTree:
             leaf_counts=jnp.concatenate(
                 [t.leaf_counts, jnp.zeros((pad,), jnp.int32)]),
         )
+    from repro.core.aitree import bank_n_cells
     bank = h.ait.bank
-    C = bank.feats.shape[0] if isinstance(bank, KNNBank) else (
-        bank.w1.shape[0] if isinstance(bank, MLPBank) else
-        bank.feat_idx.shape[0])
+    C = bank_n_cells(bank)
     Cp = int(np.ceil(C / n_shards) * n_shards)
+    cell_ok = h.ait.cell_ok
     if Cp != C:
         padc = Cp - C
 
@@ -112,6 +123,9 @@ def pad_tree_for_sharding(h: HybridTree, n_shards: int) -> HybridTree:
             return jnp.concatenate(
                 [a, jnp.full((padc,) + a.shape[1:], fill, a.dtype)])
 
+        # padding cells are never routed to (cell ids < C), but guard them
+        # anyway — False is the safe fill for an eligibility mask
+        cell_ok = _pad0(cell_ok, False)
         if isinstance(bank, KNNBank):
             bank = dataclasses.replace(
                 bank, feats=_pad0(bank.feats, np.inf),
@@ -128,7 +142,7 @@ def pad_tree_for_sharding(h: HybridTree, n_shards: int) -> HybridTree:
                 thresh=_pad0(bank.thresh, np.inf), tables=_pad0(bank.tables),
                 label_map=_pad0(bank.label_map, -1),
                 lmask=_pad0(bank.lmask, False))
-    ait = dataclasses.replace(h.ait, bank=bank)
+    ait = dataclasses.replace(h.ait, bank=bank, cell_ok=cell_ok)
     return dataclasses.replace(h, tree=t, ait=ait)
 
 
@@ -148,6 +162,11 @@ class ServeStats(NamedTuple):
     #                             caller re-serves these on the wide-bound
     #                             tier (two-tier serving; keeps max_visited
     #                             small for the common case)
+    guarded: jnp.ndarray        # [B] routed-high but demoted to the R path
+    #                             by the cell guard (fit < 1 / stale cell)
+    delta_hits: jnp.ndarray     # [B] qualifying points found in the insert
+    #                             delta buffer (already folded into
+    #                             n_results; zeros when no delta store)
 
 
 class RPathOut(NamedTuple):
@@ -163,6 +182,8 @@ class AIPathOut(NamedTuple):
     ai_counts: jnp.ndarray   # [B] qualifying points via predicted leaves
     n_pred: jnp.ndarray      # [B] predicted leaf accesses (global)
     fallback: jnp.ndarray    # [B] prediction unusable → R answer
+    guarded: jnp.ndarray     # [B] query overlaps a not-ok cell → demoted
+    #                          to the R path before prediction
 
 
 class SlotRefineOut(NamedTuple):
@@ -297,12 +318,19 @@ def _ai_path(h: HybridTree, queries: jnp.ndarray, cfg: EngineConfig,
     # global cell ids per query; translate to local expert slots
     cell_ids, cvalid, cell_over = cells_of_queries(
         h.ait.grid, queries, cfg.max_cells)
-    C_loc = (h.ait.bank.feats.shape[0] if kind == "knn" else
-             (h.ait.bank.w1.shape[0] if kind == "mlp" else
-              h.ait.bank.feat_idx.shape[0]))
+    from repro.core.aitree import bank_n_cells
+    C_loc = bank_n_cells(h.ait.bank)
     c0 = midx * C_loc
     local = (cell_ids >= c0) & (cell_ids < c0 + C_loc) & cvalid
     loc_ids = jnp.clip(cell_ids - c0, 0, C_loc - 1)
+    if cfg.guard:
+        # freshness/fit guard over the local expert shard: any overlapped
+        # cell with cell_ok False demotes the query (each valid cell is
+        # local to exactly one shard, so the psum unions the verdicts)
+        bad = jnp.any(local & ~h.ait.cell_ok[loc_ids], axis=-1)
+        guarded = jax.lax.psum(bad.astype(jnp.int32), model_axis) > 0
+    else:
+        guarded = jnp.zeros((B,), bool)
     L_glob = L_loc * n_model
     if cfg.score_union == "pmax":
         # paper-faithful dense union: one pmax over the full score table
@@ -328,18 +356,50 @@ def _ai_path(h: HybridTree, queries: jnp.ndarray, cfg: EngineConfig,
     mis = ro.n_valid > ro.n_hit   # some predicted leaf had no qualifier
     fallback = empty | mis | cell_over | over
     return AIPathOut(ai_counts=ro.n_results, n_pred=n_pred,
-                     fallback=fallback)
+                     fallback=fallback, guarded=guarded)
+
+
+def _delta_path(queries: jnp.ndarray, delta_xy: jnp.ndarray,
+                cfg: EngineConfig) -> jnp.ndarray:
+    """Freshness stage: probe the (replicated) insert delta buffer.
+
+    Returns the per-query exact hit count [B] i32 — staged points are
+    invisible to both tree paths, so the count is *added* to whichever
+    path answered. With ``use_kernel`` the probe is the Pallas kernel
+    (``ops.delta_probe``): the ``[B, cap]`` containment mask stays in
+    VMEM and only the compact slot table + counts reach HBM; the jnp
+    oracle rung is bit-identical. The buffer is replicated (it is small
+    and write-staged on the host), so no collective is needed.
+    """
+    if cfg.use_kernel:
+        from repro.kernels import ops as kops
+        _, _, cnt = kops.delta_probe(queries, delta_xy, k=cfg.delta_k)
+    else:
+        from repro.kernels import ref as kref
+        _, _, cnt = kref.delta_probe(queries, delta_xy, cfg.delta_k)
+    return cnt
 
 
 def _route_combine(h: HybridTree, queries: jnp.ndarray, rp: RPathOut,
-                   ap: AIPathOut) -> ServeStats:
-    """Router dispatch + paper cost accounting over the two stage outputs."""
+                   ap: AIPathOut,
+                   d_hits: Optional[jnp.ndarray] = None) -> ServeStats:
+    """Router dispatch + paper cost accounting over the stage outputs.
+
+    Guard-demoted rows (``ap.guarded``) take the R answer and pay only
+    the classical cost — the guard fires before prediction. Delta hits
+    (``d_hits``, the freshness stage) add to the chosen path's count:
+    staged inserts are invisible to both tree paths by construction.
+    """
     from repro.core.classifiers.router import route_high
     high = route_high(h.router, queries)
-    used_ai = high & ~ap.fallback
-    n_results = jnp.where(used_ai, ap.ai_counts, rp.r_counts)
+    demoted = high & ap.guarded
+    eligible = high & ~demoted
+    used_ai = eligible & ~ap.fallback
+    if d_hits is None:
+        d_hits = jnp.zeros_like(rp.r_counts)
+    n_results = jnp.where(used_ai, ap.ai_counts, rp.r_counts) + d_hits
     leaf_accesses = jnp.where(
-        high, ap.n_pred + jnp.where(ap.fallback, rp.n_visited, 0),
+        eligible, ap.n_pred + jnp.where(ap.fallback, rp.n_visited, 0),
         rp.n_visited)
     # overflow only matters when the R path supplied the answer: used_ai
     # rows report exact AI-path stats (n_visited stays exact regardless —
@@ -347,19 +407,24 @@ def _route_combine(h: HybridTree, queries: jnp.ndarray, rp: RPathOut,
     # already-exact rows through the wide tier for bit-identical results
     return ServeStats(n_results=n_results, leaf_accesses=leaf_accesses,
                       routed_high=high, used_ai=used_ai,
-                      r_truncated=rp.r_truncated & ~used_ai)
+                      r_truncated=rp.r_truncated & ~used_ai,
+                      guarded=demoted, delta_hits=d_hits)
 
 
 def make_serve_step(mesh, cfg: EngineConfig, *, kind: str,
                     batch_axes=("pod", "data"), model_axis: str = "model"):
     """Build the shard_map'd hybrid serve step for ``mesh``.
 
-    Returned fn: ``(hybrid, queries [B,4]) → ServeStats`` with B split over
-    ``batch_axes`` and tree/experts split over ``model_axis``. The body is
-    a composition of the stage functions above — ``_r_path`` / ``_ai_path``
-    / ``_route_combine`` — so alternative drivers (the spatial batch
-    scheduler, the two-tier wide re-serve, future partial pipelines) can
-    restage them without re-deriving the collective layout.
+    Returned fn: ``(hybrid, queries [B,4], delta_xy=None) → ServeStats``
+    with B split over ``batch_axes`` and tree/experts split over
+    ``model_axis``. ``delta_xy`` ([cap, 2] f32, +inf on unstaged slots —
+    ``core.delta.DeltaStore.xy``) is the replicated insert buffer; when
+    passed, the ``_delta_path`` stage probes it and its hits fold into
+    ``n_results``. The body is a composition of the stage functions above
+    — ``_r_path`` / ``_ai_path`` / ``_delta_path`` / ``_route_combine`` —
+    so alternative drivers (the spatial batch scheduler, the two-tier
+    wide re-serve, future partial pipelines) can restage them without
+    re-deriving the collective layout.
     """
     batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
     n_model = mesh.shape[model_axis]
@@ -369,19 +434,34 @@ def make_serve_step(mesh, cfg: EngineConfig, *, kind: str,
         ap = _ai_path(h, queries, cfg, kind, model_axis, n_model)
         return _route_combine(h, queries, rp, ap)
 
+    def body_delta(h: HybridTree, queries, delta_xy):
+        rp = _r_path(h, queries, cfg, model_axis)
+        ap = _ai_path(h, queries, cfg, kind, model_axis, n_model)
+        d = _delta_path(queries, delta_xy, cfg)
+        return _route_combine(h, queries, rp, ap, d)
+
     baxes = batch_axes if len(batch_axes) > 1 else batch_axes[0]
     qspec = P(baxes, None)
     ospec = ServeStats(n_results=P(baxes), leaf_accesses=P(baxes),
                        routed_high=P(baxes), used_ai=P(baxes),
-                       r_truncated=P(baxes))
+                       r_truncated=P(baxes), guarded=P(baxes),
+                       delta_hits=P(baxes))
 
-    def serve_step(h: HybridTree, queries: jnp.ndarray) -> ServeStats:
+    def serve_step(h: HybridTree, queries: jnp.ndarray,
+                   delta_xy: Optional[jnp.ndarray] = None) -> ServeStats:
+        if delta_xy is None:
+            shard = _shard_map(
+                body, mesh=mesh,
+                in_specs=(tree_shardings_p(h, model_axis), qspec),
+                out_specs=ospec,
+                **{_SHARD_MAP_CHECK_KW: False})
+            return shard(h, queries)
         shard = _shard_map(
-            body, mesh=mesh,
-            in_specs=(tree_shardings_p(h, model_axis), qspec),
+            body_delta, mesh=mesh,
+            in_specs=(tree_shardings_p(h, model_axis), qspec, P(None, None)),
             out_specs=ospec,
             **{_SHARD_MAP_CHECK_KW: False})
-        return shard(h, queries)
+        return shard(h, queries, delta_xy)
 
     return serve_step
 
@@ -447,7 +527,7 @@ def tree_shardings_p(h: HybridTree, model_axis: str = "model"):
             tables=P(model_axis, None, None, None),
             label_map=P(model_axis, None), lmask=P(model_axis, None))
     ait_spec = dataclasses.replace(
-        h.ait, bank=bank_spec,
+        h.ait, bank=bank_spec, cell_ok=P(model_axis),
         grid=dataclasses.replace(h.ait.grid, bbox=rep))
     router_spec = dataclasses.replace(
         h.router, feat_idx=rep, thresh=rep, tables=rep)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core.aitree import AITree, ai_query_compact
 from repro.core.classifiers.router import Router, route_high
 from repro.core.device_tree import DeviceTree
+from repro.core.grid import cells_of_queries
 from repro.core import traversal
 
 
@@ -41,18 +42,40 @@ class HybridResult(NamedTuple):
     truncated: jnp.ndarray      # [B] R-path static bounds overflowed — the
     #                             scheduler re-serves these on a wide-bound
     #                             tier (mirrors ServeStats.r_truncated)
+    guarded: jnp.ndarray        # [B] routed-high but demoted to the R path
+    #                             by the cell guard (fit < 1 or stale cell —
+    #                             mirrors ServeStats.guarded)
+
+
+def guard_demoted(ait: AITree, queries: jnp.ndarray) -> jnp.ndarray:
+    """[B] bool: query overlaps a cell the guard holds back from the AI
+    path (``cell_ok`` False — under-fit at build time, or stale since the
+    freshness monitor saw inserts land there). Shared by ``hybrid_query``
+    and (shard-local + psum) the engine's ``_ai_path``.
+    """
+    cell_ids, valid, _ = cells_of_queries(ait.grid, queries, ait.max_cells)
+    return jnp.any(valid & ~ait.cell_ok[cell_ids], axis=-1)
 
 
 @functools.partial(jax.jit, static_argnames=("max_visited", "max_results",
-                                             "use_kernel", "force_path"))
+                                             "use_kernel", "force_path",
+                                             "guard"))
 def hybrid_query(h: HybridTree, queries: jnp.ndarray, *,
                  max_visited: int = 256, max_results: int = 512,
-                 use_kernel: bool = False, force_path: str = "auto"
-                 ) -> HybridResult:
+                 use_kernel: bool = False, force_path: str = "auto",
+                 guard: bool = True) -> HybridResult:
     """Masked single-dispatch execution of both paths.
 
     ``force_path``: "auto" (router), "ai" (AI-tree only + fallback), or "r"
     (classical only) — the latter two give the paper's standalone baselines.
+
+    ``guard`` (auto routing only): demote queries overlapping a not-ok
+    cell (``AITree.cell_ok``) to the exact R path *before* prediction.
+    This closes the under-prediction blind spot: a bank with
+    ``exact_fit < 1`` can predict a strict subset of the true leaves with
+    every predicted leaf still yielding hits — no fallback signal fires
+    and results are silently dropped. The forced baselines bypass the
+    guard (they measure the raw paths).
     """
     queries = queries.astype(jnp.float32)
     B = queries.shape[0]
@@ -64,6 +87,12 @@ def hybrid_query(h: HybridTree, queries: jnp.ndarray, *,
     else:
         high = route_high(h.router, queries)
 
+    if guard and force_path == "auto":
+        demoted = high & guard_demoted(h.ait, queries)
+    else:
+        demoted = jnp.zeros((B,), bool)
+    eligible = high & ~demoted
+
     # serving-path compact AI query: prediction lands in the [B, max_pred]
     # slot table (bit-identical to the dense ai_query on all shared fields;
     # the [B, L] score table exists only on the kernel-free oracle rung)
@@ -72,13 +101,14 @@ def hybrid_query(h: HybridTree, queries: jnp.ndarray, *,
     r = traversal.range_query(h.tree, queries, max_visited=max_visited,
                               max_results=max_results, use_kernel=use_kernel)
 
-    used_ai = high & ~ai.fallback
+    used_ai = eligible & ~ai.fallback
     n_results = jnp.where(used_ai, ai.n_results, r.n_results)
     result_ids = jnp.where(used_ai[:, None], ai.result_ids, r.result_ids)
     # cost accounting (paper §IV-A): AI path pays prediction + its accesses;
-    # a fallback additionally pays the classical visit set.
+    # a fallback additionally pays the classical visit set. Guard-demoted
+    # rows never reach prediction, so they pay the classical cost only.
     leaf_accesses = jnp.where(
-        high,
+        eligible,
         ai.n_pred + jnp.where(ai.fallback, r.n_visited, 0),
         r.n_visited,
     )
@@ -93,4 +123,5 @@ def hybrid_query(h: HybridTree, queries: jnp.ndarray, *,
         # only flag rows the R path answered — used_ai rows are exact
         # (AI-side truncation already forces fallback)
         truncated=r.truncated & ~used_ai,
+        guarded=demoted,
     )

@@ -1,0 +1,325 @@
+"""Serving-time freshness/fit monitor + the live serving-state owner.
+
+The guard tier has two inputs, tracked here:
+
+* **fit** — the per-cell exact-fit flags ``build.fit_airtree`` measured
+  at training time (a cell whose training queries were not all answered
+  exactly can under-predict silently);
+* **staleness** — inserts that landed in a cell *since the bank was
+  fit*: the cell's model has never seen those points, so its predictions
+  there are unfounded even if its fit was perfect.
+
+``FreshnessMonitor`` ANDs the two into the ``cell_ok`` mask the
+router-side guard consults (``AITree.cell_ok``): stale or ``fit < 1``
+cells are demoted to the exact R path, which closes the under-prediction
+blind spot for drifted *and* under-trained banks in one mechanism.
+
+``FreshServer`` owns the whole live state — hybrid tree, delta store,
+monitor — and is what the scheduler drives for a mixed read/write
+stream: ``serve``/``serve_wide`` answer batches (tree paths + delta
+probe, merged), ``insert`` stages points and bumps staleness, ``repack``
+swaps in a fresh bulk-loaded tree between batches. After a repack the
+*entire* bank is marked stale: ``str_bulk`` renumbers every leaf, so the
+bank's label space refers to a tree that no longer exists — the guard
+demoting everything to the R path is exactly what keeps serving correct
+until a refit (``refit`` recomputes labels + fit flags on the new tree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import delta as deltalib
+from repro.core.grid import Grid, cell_range
+from repro.core.hybrid import HybridResult, HybridTree, hybrid_query
+
+# module-level jit so staging doesn't retrace per insert batch (a fresh
+# jax.jit wrapper per call would discard the trace cache every time)
+_cell_range_j = jax.jit(cell_range)
+
+
+class FreshResult(NamedTuple):
+    """``HybridResult`` + the delta-probe count (mirrors
+    ``ServeStats.delta_hits`` so mixed-stream reporting is uniform
+    across the hybrid and engine servers)."""
+    routed_high: "jax.Array"
+    used_ai: "jax.Array"
+    n_results: "jax.Array"
+    result_ids: "jax.Array"
+    leaf_accesses: "jax.Array"
+    n_visited_r: "jax.Array"
+    n_true: "jax.Array"
+    truncated: "jax.Array"
+    guarded: "jax.Array"
+    delta_hits: "jax.Array"     # [B] buffer hits (already in n_results)
+
+
+assert FreshResult._fields[:len(HybridResult._fields)] == \
+    HybridResult._fields, "FreshResult must prefix-extend HybridResult"
+
+
+class FreshnessStats(NamedTuple):
+    """Aggregate monitor state, as surfaced per stream by launch/serve."""
+    n_cells: int
+    fit_cells: int       # cells with exact training fit
+    stale_cells: int     # cells with inserts since the bank was fit
+    ok_cells: int        # fit AND fresh — serve-eligible on the AI path
+    n_inserts: int       # staged since the monitor was (re)fit
+    n_repacks: int
+    delta_fill: int      # points currently staged in the buffer
+
+
+class FreshnessMonitor:
+    """Host-side per-cell fit/staleness tracking over the model grid."""
+
+    def __init__(self, grid: Grid, fit_ok: np.ndarray):
+        self._grid = grid
+        self.fit_ok = np.asarray(fit_ok, bool).copy()
+        assert self.fit_ok.shape == (grid.n_cells,), \
+            (self.fit_ok.shape, grid.g)
+        self.stale = np.zeros_like(self.fit_ok, dtype=np.int64)
+        self.n_inserts = 0
+        self.n_repacks = 0
+
+    def _cells_of_points(self, points: np.ndarray) -> np.ndarray:
+        # map points as degenerate rects through the grid's own
+        # ``cell_range`` so the monitor's cell attribution can never
+        # drift from the convention serving queries are routed by;
+        # out-of-bbox points clamp into the edge cells (conservative —
+        # the edge cell's model never trained on that region either)
+        p = np.asarray(points, np.float32).reshape(-1, 2)
+        rects = jnp.asarray(np.concatenate([p, p], axis=1))
+        cr = np.asarray(_cell_range_j(self._grid, rects))
+        return cr[:, 1].astype(np.int64) * self._grid.g + cr[:, 0]
+
+    def note_inserts(self, points: np.ndarray) -> None:
+        """Inserts landed: bump the receiving cells' staleness."""
+        cells = self._cells_of_points(points)
+        np.add.at(self.stale, cells, 1)
+        self.n_inserts += int(cells.shape[0])
+
+    def note_repack(self) -> None:
+        """The tree was rebuilt: every cell's label space is now wrong
+        (bulk load renumbers all leaves), so the whole bank goes stale
+        until a refit."""
+        self.stale[:] = max(1, int(self.stale.max()))
+        self.n_repacks += 1
+
+    def note_refit(self, fit_ok: np.ndarray,
+                   grid: Optional[Grid] = None) -> None:
+        """The bank was refit on the current tree: staleness resets and
+        the fit flags are replaced by the new evaluation's. Pass ``grid``
+        when the refit's hill-climb landed on a different grid size — the
+        monitor re-anchors to it (flags and staleness are per-cell, so
+        they cannot survive a geometry change anyway)."""
+        if grid is not None:
+            self._grid = grid
+        self.fit_ok = np.asarray(fit_ok, bool).copy()
+        assert self.fit_ok.shape == (self._grid.n_cells,), \
+            (self.fit_ok.shape, self._grid.g)
+        self.stale = np.zeros_like(self.fit_ok, dtype=np.int64)
+        self.n_inserts = 0
+
+    def cell_ok(self) -> np.ndarray:
+        """[C] bool: serve-eligible = exact fit AND no inserts since."""
+        return self.fit_ok & (self.stale == 0)
+
+    def guard_array(self) -> jnp.ndarray:
+        return jnp.asarray(self.cell_ok())
+
+    def stats(self, delta_fill: int = 0) -> FreshnessStats:
+        ok = self.cell_ok()
+        return FreshnessStats(
+            n_cells=int(ok.size), fit_cells=int(self.fit_ok.sum()),
+            stale_cells=int((self.stale > 0).sum()), ok_cells=int(ok.sum()),
+            n_inserts=self.n_inserts, n_repacks=self.n_repacks,
+            delta_fill=delta_fill)
+
+
+class FreshServer:
+    """Live serving state for a mixed read/write stream (single-device
+    hybrid path; the distributed engine composes the same pieces via
+    ``make_serve_step``'s ``delta_xy`` argument).
+
+    Functionalized jax under a stateful host shell: every batch serves
+    through jit'd closures over the *current* (hybrid, delta) pair;
+    ``insert``/``repack`` swap that pair between batches, never under a
+    running step. ``serve``/``serve_wide`` realize the scheduler's
+    two-tier contract (``HybridResult.truncated``), with the wide tier's
+    bounds — including the delta slot bound — scaled by ``wide_factor``.
+    """
+
+    trunc_field = "truncated"
+
+    def __init__(self, points: np.ndarray, hybrid: HybridTree, *,
+                 delta_cap: int = 4096, max_visited: int = 64,
+                 max_results: int = 512, delta_k: int = 64,
+                 wide_factor: int = 8, use_kernel: bool = False,
+                 guard: bool = True,
+                 refit_fn: Optional[Callable] = None):
+        self.points = np.asarray(points, np.float64)
+        self.max_entries = hybrid.tree.max_entries
+        self.monitor = FreshnessMonitor(hybrid.ait.grid,
+                                        np.asarray(hybrid.ait.cell_ok))
+        self.delta = deltalib.make_delta(delta_cap,
+                                         base=self.points.shape[0])
+        self.hybrid = hybrid
+        self._mv, self._mr = int(max_visited), int(max_results)
+        self._dk, self._wf = int(delta_k), int(wide_factor)
+        self._uk, self._guard = bool(use_kernel), bool(guard)
+        # refit_fn(device_tree) -> (HybridTree, cell_fit [C] bool) — e.g.
+        # a relabel + build.fit_airtree closure; None keeps the stale bank
+        # guarded (R-path serving) after repacks
+        self._refit_fn = refit_fn
+        self._sync_guard()
+
+    # -- serving -----------------------------------------------------------
+
+    def _serve(self, q: jnp.ndarray, widen: int) -> "jax.Array":
+        mv, mr = self._mv * widen, self._mr * widen
+        dk = self._dk * widen
+        res = hybrid_query(self.hybrid, q, max_visited=mv, max_results=mr,
+                           use_kernel=self._uk, guard=self._guard)
+        hits = deltalib.probe(self.delta.xy, q, k=dk, base=self.delta.base,
+                              use_kernel=self._uk)
+        merged = deltalib.merge_hybrid_result(res, hits)
+        return FreshResult(*merged, delta_hits=hits.count)
+
+    def serve(self, q) -> "jax.Array":
+        return self._serve(jnp.asarray(q), 1)
+
+    def serve_wide(self, q) -> "jax.Array":
+        return self._serve(jnp.asarray(q), self._wf)
+
+    # -- writes ------------------------------------------------------------
+
+    @property
+    def delta_fill(self) -> int:
+        return self.delta.n
+
+    def _sync_guard(self) -> None:
+        ait = dataclasses.replace(self.hybrid.ait,
+                                  cell_ok=self.monitor.guard_array())
+        self.hybrid = dataclasses.replace(self.hybrid, ait=ait)
+
+    def insert(self, points: np.ndarray) -> None:
+        """Stage inserts into the delta buffer (between batches); the
+        receiving cells go stale and drop off the AI path. A batch the
+        buffer cannot absorb forces a repack first (this is the
+        repack-before-overflow guarantee ``stage_inserts`` documents);
+        a single batch larger than the whole capacity still raises."""
+        m = np.asarray(points, np.float32).reshape(-1, 2).shape[0]
+        if self.delta.n + m > self.delta.capacity:
+            self.repack()
+        self.delta = deltalib.stage_inserts(self.delta, points)
+        self.monitor.note_inserts(points)
+        self._sync_guard()
+
+    def repack(self) -> None:
+        """Online repack: swap in a fresh bulk-loaded tree holding every
+        staged point, empty the buffer, and (without a refit) guard the
+        whole bank — its labels refer to the old tree's leaf ids."""
+        _, dtree, allp, self.delta = deltalib.repack(
+            self.points, self.delta, max_entries=self.max_entries)
+        self.points = allp
+        self.monitor.note_repack()
+        if self._refit_fn is not None:
+            hybrid, cell_fit = self._refit_fn(dtree)
+            self.hybrid = hybrid
+            # the refit's grid search may land on a different grid size —
+            # re-anchor the monitor to the refit hybrid's own grid
+            self.monitor.note_refit(np.asarray(cell_fit, bool),
+                                    grid=hybrid.ait.grid)
+        else:
+            self.hybrid = dataclasses.replace(self.hybrid, tree=dtree)
+        self._sync_guard()
+
+    def stats(self) -> FreshnessStats:
+        return self.monitor.stats(delta_fill=self.delta.n)
+
+
+class EngineFreshServer:
+    """The ``FreshServer`` shape over the shard_map engine: serves through
+    ``engine.make_serve_step``'s two tiers with the replicated delta
+    buffer as the step's ``delta_xy`` argument. Tree and guard swaps
+    re-pad for the mesh (``pad_tree_for_sharding``) between batches; the
+    jit'd steps take (hybrid, queries, delta) as *arguments*, so staging
+    inserts never retraces — only a repack's leaf-count change does.
+    """
+
+    trunc_field = "r_truncated"
+
+    def __init__(self, points: np.ndarray, hybrid: HybridTree, mesh, cfg, *,
+                 kind: str, n_model: int, delta_cap: int = 4096,
+                 wide_factor: int = 8):
+        from repro.core import engine as eng
+        self.points = np.asarray(points, np.float64)
+        self.max_entries = hybrid.tree.max_entries
+        self.monitor = FreshnessMonitor(hybrid.ait.grid,
+                                        np.asarray(hybrid.ait.cell_ok))
+        self.delta = deltalib.make_delta(delta_cap,
+                                         base=self.points.shape[0])
+        self.hybrid = hybrid
+        self._n_model = int(n_model)
+        narrow, wide = eng.make_two_tier_steps(
+            mesh, cfg, kind=kind, wide_factor=wide_factor)
+        self._jnarrow = jax.jit(narrow)
+        self._jwide = jax.jit(wide)
+        self._repad()
+
+    def _repad(self) -> None:
+        """Full mesh re-pad — needed when the *tree* changes (repack).
+        Guard-only updates go through ``_sync_guard``, which swaps just
+        the padded eligibility mask instead of re-concatenating every
+        leaf/bank array per staged insert batch."""
+        from repro.core import engine as eng
+        self._sync_hybrid()
+        self._h_p = eng.pad_tree_for_sharding(self.hybrid, self._n_model)
+
+    def _sync_hybrid(self) -> None:
+        ait = dataclasses.replace(self.hybrid.ait,
+                                  cell_ok=self.monitor.guard_array())
+        self.hybrid = dataclasses.replace(self.hybrid, ait=ait)
+
+    def _sync_guard(self) -> None:
+        self._sync_hybrid()
+        ok = self.hybrid.ait.cell_ok
+        Cp = self._h_p.ait.cell_ok.shape[0]
+        ok_p = jnp.concatenate(
+            [ok, jnp.zeros((Cp - ok.shape[0],), ok.dtype)]) \
+            if Cp != ok.shape[0] else ok
+        self._h_p = dataclasses.replace(
+            self._h_p, ait=dataclasses.replace(self._h_p.ait, cell_ok=ok_p))
+
+    def serve(self, q) -> "jax.Array":
+        return self._jnarrow(self._h_p, jnp.asarray(q), self.delta.xy)
+
+    def serve_wide(self, q) -> "jax.Array":
+        return self._jwide(self._h_p, jnp.asarray(q), self.delta.xy)
+
+    @property
+    def delta_fill(self) -> int:
+        return self.delta.n
+
+    def insert(self, points: np.ndarray) -> None:
+        m = np.asarray(points, np.float32).reshape(-1, 2).shape[0]
+        if self.delta.n + m > self.delta.capacity:
+            self.repack()     # repack-before-overflow, as FreshServer
+        self.delta = deltalib.stage_inserts(self.delta, points)
+        self.monitor.note_inserts(points)
+        self._sync_guard()
+
+    def repack(self) -> None:
+        _, dtree, allp, self.delta = deltalib.repack(
+            self.points, self.delta, max_entries=self.max_entries)
+        self.points = allp
+        self.monitor.note_repack()
+        self.hybrid = dataclasses.replace(self.hybrid, tree=dtree)
+        self._repad()
+
+    def stats(self) -> FreshnessStats:
+        return self.monitor.stats(delta_fill=self.delta.n)

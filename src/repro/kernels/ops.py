@@ -22,6 +22,7 @@ from repro.kernels import leaf_refine as _refine
 from repro.kernels import forest_infer as _forest
 from repro.kernels import traverse_fused as _traverse
 from repro.kernels import mlp_infer as _mlp
+from repro.kernels import delta_probe as _delta
 from repro.kernels import spatial_key as _skey
 from repro.kernels import wkv6 as _wkv6
 
@@ -343,6 +344,63 @@ def mlp_predict_compact(queries: jnp.ndarray, bank, cell_ids: jnp.ndarray,
     idx, cnt = _mlp.mlp_predict_compact_t(
         xp, cidp, okp, w1f, b1a, w2f, b2a, lm, lmk, k=k, lp=lpt,
         thr=float(threshold), tb=tb, tl=tl, kc=kc, interpret=interp)
+    count = cnt[:B, 0]
+    valid = jnp.arange(k, dtype=jnp.int32)[None, :] < count[:, None]
+    return jnp.where(valid, idx[:B, :k], 0), valid, count
+
+
+def _delta_tiles(B: int, cap: int, interp: bool, tb: int | None = None,
+                 tn: int | None = None) -> tuple[int, int, int]:
+    """Tile resolution for the delta-probe kernel: explicit caller
+    override → autotune cache entry (``delta-`` form keys) → hand-picked
+    default. Interpret mode folds the whole (lane-padded) buffer into one
+    tile, like the other kernels' leaf-axis folds."""
+    tune = _delta.tuned_tiles_delta(B, cap, interp)
+    Np = (max(128, cap) + 127) // 128 * 128
+    if tb is None:
+        tb = tune.get("tb") or min(1024 if interp else _delta.DEF_TB,
+                                   (max(8, B) + 7) // 8 * 8)
+    if tn is None:
+        tn = tune.get("tl") or (Np if interp else min(_delta.DEF_TN, Np))
+    kc = tune.get("kc", _traverse.COMPACT_KC)
+    return tb, tn, kc
+
+
+def delta_probe(queries: jnp.ndarray, pts: jnp.ndarray, *, k: int,
+                tb: int | None = None, tn: int | None = None
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Probe the insert delta buffer: queries [B, 4] × buffer points
+    [cap, 2] → compact hit slots ``(slot_idx [B, k] i32, valid [B, k]
+    bool, count [B] i32)`` in insertion order.
+
+    Semantically ``compact_mask_counted(contains(queries, pts), k)``, but
+    on the kernel path the ``[B, cap]`` containment mask stays in VMEM
+    tile-by-tile and never reaches HBM (absent from the lowered HLO — the
+    slot-table contract the serving paths share). Unstaged/padding buffer
+    slots must hold +inf coordinates (``core.delta`` maintains that);
+    ``count`` is the row's full hit total, so overflow (``count > k``)
+    survives compaction exactly as the other compact wrappers' counts do.
+
+    Fallback ladder mirrors ``traverse_compact``: the jnp dense oracle
+    when kernels are off or the form-aware VMEM estimate exceeds the
+    budget — bit-identical either way. Tile knobs resolve explicit
+    override → autotune cache entry (``delta-*`` keys) → default.
+    """
+    B = queries.shape[0]
+    cap = pts.shape[0]
+    if not kernels_enabled():
+        return ref.delta_probe(queries, pts, k)
+    interp = _interpret()
+    tb, tn, kc = _delta_tiles(B, cap, interp, tb, tn)
+    kp = k if interp else \
+        (k + _traverse.LANE - 1) // _traverse.LANE * _traverse.LANE
+    if _delta.vmem_estimate_delta(tb, tn, kp, tpu_form=not interp,
+                                  kc=kc) > _traverse.VMEM_BUDGET:
+        return ref.delta_probe(queries, pts, k)
+    qp = _pad_to(queries.astype(jnp.float32), 0, tb, 0.0)
+    pp = _pad_to(pts.astype(jnp.float32), 0, tn, jnp.inf)
+    idx, cnt = _delta.delta_probe_t(qp.T, pp.T, k=k, tb=tb, tn=tn, kc=kc,
+                                    interpret=interp)
     count = cnt[:B, 0]
     valid = jnp.arange(k, dtype=jnp.int32)[None, :] < count[:, None]
     return jnp.where(valid, idx[:B, :k], 0), valid, count

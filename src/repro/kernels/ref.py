@@ -114,6 +114,30 @@ def mlp_predict_compact(x: jnp.ndarray, cell_ids: jnp.ndarray,
     return compact_mask_counted(scores > threshold, k)
 
 
+def delta_contains(queries: jnp.ndarray, pts: jnp.ndarray) -> jnp.ndarray:
+    """Dense delta-probe ground truth: [B, 4] × [cap, 2] → [B, cap] bool.
+
+    Closed-rectangle containment (the shared ``geometry`` predicate, so
+    the convention cannot drift from the refine path's) of each buffer
+    point in each query rect; +inf (unstaged/padding) points never hit —
+    the same convention the kernel's tile test relies on.
+    """
+    from repro.core import geometry as geo
+    return geo.jnp_contains_point(
+        queries.astype(jnp.float32)[:, None, :],
+        pts.astype(jnp.float32)[None, :, :])
+
+
+def delta_probe(queries: jnp.ndarray, pts: jnp.ndarray, k: int
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Ground truth for ``kernels.delta_probe``: dense containment mask →
+    ``compact_mask_counted``. Returns ``(slot_idx [B, k], valid, count)``
+    with slots in buffer (= insertion) order.
+    """
+    from repro.core.traversal import compact_mask_counted
+    return compact_mask_counted(delta_contains(queries, pts), k)
+
+
 def leaf_refine(queries: jnp.ndarray, ex: jnp.ndarray, ey: jnp.ndarray,
                 leaf_idx: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
     """queries [B,4], ex/ey [L,M], leaf_idx [B,K], valid [B,K] → [B,K,M]."""

@@ -176,7 +176,8 @@ def _airtree_cell(shape: str, multi_pod: bool):
     bank = KNNBank(feats=f32(C, Qp, 4), labels=f32(C, Qp, Cl),
                    label_map=i32(C, Cl), lmask=jax.ShapeDtypeStruct(
                        (C, Cl), jnp.bool_), eps=1e-6)
-    ait = AITree(grid=Grid(bbox=f32(4), g=20), bank=bank, kind="knn",
+    ait = AITree(grid=Grid(bbox=f32(4), g=20), bank=bank,
+                 cell_ok=jax.ShapeDtypeStruct((C,), jnp.bool_), kind="knn",
                  max_cells=4, max_pred=16, threshold=0.5)
     router = Router(feat_idx=i32(16, 6), thresh=f32(16, 6),
                     tables=f32(16, 2 ** 6, 1), tau=0.75)

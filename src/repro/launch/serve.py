@@ -12,6 +12,16 @@ that overflowed the narrow R-path bound are re-served on the wide tier.
 Reports aggregate stats over the whole stream plus an oracle check that no
 query was dropped. With >1 device, serving dispatches through the
 shard_map engine (queries over 'data', tree/experts over 'model').
+
+Mixed read/write mode (``--insert-rate r``): a fraction ``r`` of the
+points is held out of the initial build and staged as dynamic inserts
+between query segments (``core.schedule.serve_mixed_workload`` over a
+``FreshServer``): every batch probes the device-side delta buffer, the
+freshness guard demotes stale/under-fit cells to the exact R path, and
+``--repack-every N`` triggers the online repack (bulk-reload swap between
+batches) once N points are staged. The oracle then checks every query's
+result count against brute-force containment over exactly the points
+visible to its segment.
 """
 from __future__ import annotations
 
@@ -23,7 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import build, device_tree as dt, engine, labels, schedule
+from repro.core import geometry as geo
 from repro.core.hybrid import hybrid_query
+from repro.core.monitor import EngineFreshServer, FreshServer
 from repro.core.rtree import RTree
 from repro.launch import mesh as pmesh
 from repro.data import synth
@@ -80,6 +92,73 @@ def make_serve_fns(hyb, args, devices):
     return narrow, wide, "truncated", contextlib.nullcontext(), fused
 
 
+def make_fresh_server(base, hyb, args, devices):
+    """Build the mixed-stream server: ``FreshServer`` (single-device
+    hybrid path) or ``EngineFreshServer`` (shard_map engine, replicated
+    delta) plus the mesh context."""
+    import contextlib
+    if args.distributed and len(devices) > 1:
+        n = len(devices)
+        nd = max(1, n // 2)
+        n_model = n // nd
+        mesh = jax.make_mesh((nd, n_model), ("data", "model"))
+        cfg = engine.EngineConfig(max_visited=args.max_visited,
+                                  use_kernel=args.kernel)
+        srv = EngineFreshServer(base, hyb, mesh, cfg, kind=args.classifier,
+                                n_model=n_model, delta_cap=args.delta_cap,
+                                wide_factor=args.wide_factor)
+        return srv, pmesh.set_mesh(mesh)
+    srv = FreshServer(base, hyb, delta_cap=args.delta_cap,
+                      max_visited=args.max_visited, max_results=512,
+                      wide_factor=args.wide_factor, use_kernel=args.kernel)
+    return srv, contextlib.nullcontext()
+
+
+def serve_mixed(base, extra, hyb, wl, args, rep) -> None:
+    """Drive the mixed read/write stream and report freshness stats."""
+    server, ctx = make_fresh_server(base, hyb, args, jax.devices())
+    bbox = schedule.workload_bbox(wl.queries)
+    with ctx:
+        t0 = time.time()
+        mixed = schedule.serve_mixed_workload(
+            server, wl.queries, extra, batch=args.batch, sort=args.sort,
+            bbox=bbox, insert_every=args.insert_every,
+            repack_every=args.repack_every)
+        dt_s = time.time() - t0
+    st = mixed.stats
+    fs = server.stats()
+    trunc_field = getattr(server, "trunc_field", "truncated")
+    acc = float(np.asarray(st.leaf_accesses).mean())
+    ai = float(np.asarray(st.used_ai).mean())
+    guarded = float(np.asarray(st.guarded).mean())
+    d_hits = int(np.asarray(st.delta_hits).sum())
+    resid = int(np.asarray(getattr(st, trunc_field)).sum())
+    print(f"# mixed stream: {mixed.n_queries} queries / {mixed.n_inserts} "
+          f"inserts in {mixed.n_segments} segments ({mixed.n_batches} "
+          f"batches, sort={mixed.sort}), {mixed.n_repacks} repacks, "
+          f"{mixed.n_reserved} re-served wide, {resid} still truncated")
+    print(f"# serve: {mixed.n_queries/dt_s:.0f} queries/s, "
+          f"{acc:.2f} leaf accesses/query, {100*ai:.1f}% AI path, "
+          f"{100*guarded:.1f}% guard-demoted, {d_hits} delta hits")
+    print(f"# freshness: {fs.ok_cells}/{fs.n_cells} cells serve-eligible "
+          f"({fs.fit_cells} exact-fit, {fs.stale_cells} stale), delta "
+          f"fill {fs.delta_fill}/{args.delta_cap}, "
+          f"{fs.n_repacks} repacks")
+    # freshness oracle: each segment's queries against exactly the points
+    # visible to it (schedule.visible_segments — the scheduler's actual
+    # staging, never re-derived from the policy)
+    mism = 0
+    got = np.asarray(st.n_results)
+    for (lo, hi), visible in schedule.visible_segments(mixed, base):
+        for o in range(lo, hi, 256):
+            qs = wl.queries[o:min(o + 256, hi)]
+            exp = geo.np_contains_point(
+                qs[:, None, :], visible[None, :, :]).sum(axis=1)
+            mism += int(np.sum(exp != got[o:min(o + 256, hi)]))
+    print(f"# oracle: {mism} / {mixed.n_queries} n_results mismatches vs "
+          f"per-segment brute-force containment")
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--dataset", default="tweets", choices=("tweets",
@@ -105,14 +184,28 @@ def main() -> None:
                         "the fused prediction kernel)")
     p.add_argument("--distributed", action="store_true",
                    help="serve through the shard_map engine")
+    p.add_argument("--insert-rate", type=float, default=0.0,
+                   help="fraction of points held out of the build and "
+                        "staged as dynamic inserts during the stream")
+    p.add_argument("--insert-every", type=int, default=4,
+                   help="query batches per stream segment (inserts land "
+                        "between segments)")
+    p.add_argument("--repack-every", type=int, default=0,
+                   help="online repack once this many inserts are staged "
+                        "(0 = never; buffer must then hold them all)")
+    p.add_argument("--delta-cap", type=int, default=8192,
+                   help="delta store capacity (points)")
     args = p.parse_args()
 
     gen = synth.tweets_like if args.dataset == "tweets" else synth.crimes_like
     pts = gen(args.points)
-    print(f"# dataset {args.dataset}: {pts.shape[0]} points")
+    n_ins = int(round(args.insert_rate * pts.shape[0]))
+    base, extra = (pts[:-n_ins], pts[-n_ins:]) if n_ins else (pts, None)
+    print(f"# dataset {args.dataset}: {pts.shape[0]} points"
+          + (f" ({n_ins} held out as inserts)" if n_ins else ""))
 
     t0 = time.time()
-    tree = RTree(max_entries=args.node_capacity).insert_all(pts)
+    tree = RTree(max_entries=args.node_capacity).insert_all(base)
     dtree = dt.flatten(tree)
     print(f"# R-tree: {dtree.n_leaves} leaves, height {dtree.height}, "
           f"built in {time.time()-t0:.1f}s")
@@ -124,9 +217,14 @@ def main() -> None:
 
     hyb, rep = build.fit_airtree(dtree, wl, kind=args.classifier,
                                  verbose=True)
-    print(f"# AI+R: grid {rep.grid_size}², exact-fit {rep.exact_fit:.3f}, "
+    print(f"# AI+R: grid {rep.grid_size}², exact-fit {rep.exact_fit:.3f} "
+          f"({int(rep.cell_fit.sum())}/{rep.cell_fit.size} cells exact), "
           f"router test acc {rep.router.test_acc:.3f}, "
           f"models {rep.model_bytes/1e6:.2f} MB")
+
+    if n_ins:
+        serve_mixed(base, extra, hyb, wl, args, rep)
+        return
 
     narrow_fn, wide_fn, trunc_field, ctx, ai_fused = make_serve_fns(
         hyb, args, jax.devices())
