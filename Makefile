@@ -19,6 +19,7 @@ smoke: test
 # Wired into the fast CI job.
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.engine_bench --smoke
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --check
 
 # Toy-scale run of both user-facing examples (they are living docs — the
 # fast CI job executes them so the documented API path can't silently rot).

@@ -253,6 +253,98 @@ def sweep_delta_shape(B: int, cap: int, k: int, quick: bool,
     return key, entry
 
 
+def sweep_sliced_shape(B: int, L: int, fanout: int, k: int, quick: bool,
+                       rows: list) -> tuple[str, dict]:
+    """Knob sweep for the ancestor-sliced traversal form (``sliced-*``
+    keys).
+
+    Unlike the other sweeps, the swept ``tl`` is the slice granularity
+    baked into the ancestor table — every candidate **rebuilds the
+    table** (changing tl changes the windows, hence the whole operand
+    layout), and the bit-identity gate runs against the jnp oracle's
+    compacted output rather than a default candidate, since no single
+    default layout spans all granularities. ``ops._sliced_call`` and the
+    on-the-fly table build (``_build_slices_if_concrete``) consult the
+    winning entry; tables attached at ``flatten`` time keep their own
+    granularity and only pick up the ``tb``/``sub_tl``/``kc`` knobs.
+    """
+    from repro.core.device_tree import build_ancestor_table
+    from repro.core.traversal import compact_mask_counted
+    from repro.data.synth_tree import synth_levels
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(0)
+    mbrs, parents = synth_levels(L, fanout, rng, str_pack=True)
+    lm = [jnp.asarray(m) for m in mbrs]
+    lp = [jnp.asarray(p) for p in parents]
+    n_levels = len(lm)
+    interp = jax.default_backend() != "tpu"
+    qs = _workloads(B, rng)
+    oracle = [jax.tree.map(np.asarray, compact_mask_counted(
+        jnp.asarray(ref.traverse_fused(q, lm, lp)), k)) for q in qs]
+
+    tables: dict = {}
+
+    def table(tl):
+        if tl not in tables:
+            tables[tl] = build_ancestor_table(
+                [np.asarray(p) for p in parents], tl=tl)
+        return tables[tl]
+
+    def run(cand, q):
+        sl = table(cand["tl"])
+        qp, im, ip, lmt, lpt = ops._sliced_operands(q, lm, lp, sl,
+                                                    cand["tb"])
+        return tf.traverse_compact_sliced_t(
+            sl.starts, qp.T, im, ip, lmt, lpt, k=k, widths=sl.widths,
+            tb=cand["tb"], tl=sl.tl, sub_tl=cand["sub_tl"],
+            kc=cand["kc"], interpret=interp)
+
+    if interp:
+        # coarse granularities only: interpret unrolls the leaf-tile grid
+        # at trace time, so fine slices pay a compile-time cliff
+        tbs = [min(1024, (max(8, B) + 7) // 8 * 8)] + \
+            ([128] if not quick else [])
+        tls = [2048, 4096] if not quick else [4096]
+        sub_tls = [256, 512]
+        kcs = [tf.COMPACT_KC]       # unused by the interpret epilogue
+    else:
+        tbs = [128, 256]
+        tls = [512, 1024, 2048]
+        sub_tls = [tf.SUB_TL]       # unused by the TPU form
+        kcs = [4, 8, 16]
+    default = {"tb": tbs[0], "tl": tls[-1] if interp else tf.DEF_TL,
+               "sub_tl": tf.SUB_TL, "kc": tf.COMPACT_KC}
+    cands = [{"tb": tb, "tl": tl, "sub_tl": s, "kc": kc}
+             for tb, tl, s, kc in itertools.product(tbs, tls, sub_tls,
+                                                    kcs)]
+    if default not in cands:
+        cands.insert(0, default)
+
+    best, best_t, default_t = None, np.inf, None
+    for cand in cands:
+        # correctness gate: counts exactly, slots agree wherever valid
+        for q, (ri, rv, rc) in zip(qs, oracle):
+            ci, cc = jax.tree.map(np.asarray, run(cand, q))
+            np.testing.assert_array_equal(cc[:B, 0], rc)
+            np.testing.assert_array_equal(np.where(rv, ci[:B, :k], 0),
+                                          np.where(rv, ri, 0))
+        t = sum(_med_time(lambda q=q: run(cand, q)) for q in qs)
+        if cand == default:
+            default_t = t
+        if t < best_t:
+            best, best_t = dict(cand), t
+    if default_t is None:
+        default_t = sum(_med_time(lambda q=q: run(default, q)) for q in qs)
+    key = tf.tune_key_sliced(B, L, n_levels, interp)
+    entry = dict(best, us=best_t * 1e6, default_us=default_t * 1e6)
+    rows.append((f"autotune_{key}_us", best_t * 1e6,
+                 f"default_us={default_t * 1e6:.0f},"
+                 f"tiles=tb{best['tb']}tl{best['tl']}"
+                 f"s{best['sub_tl']}kc{best['kc']}"))
+    return key, entry
+
+
 def main(argv=None) -> list:
     p = argparse.ArgumentParser()
     p.add_argument("--out", default=tf.autotune_cache_path(),
@@ -283,6 +375,12 @@ def main(argv=None) -> list:
     cache[key] = entry
     print(f"{key}: {entry}")
     key, entry = sweep_delta_shape(256, 4096, args.k, args.quick, rows)
+    cache[key] = entry
+    print(f"{key}: {entry}")
+    # sliced form: swept at a shape past the VMEM budget (the only place
+    # the ladder picks it)
+    key, entry = sweep_sliced_shape(256, 32768, 4, args.k, args.quick,
+                                    rows)
     cache[key] = entry
     print(f"{key}: {entry}")
     with open(args.out, "w") as f:

@@ -551,6 +551,59 @@ def kernel_micro(rows: list) -> None:
                  f"{BH*T/dtm/1e6:.2f}Mtok/s"))
 
 
+def scale_bench(rows: list, B: int = 64, quick: bool = False) -> None:
+    """Large-tree scaling: per-leaf traversal cost of the three dispatch
+    forms — full-VMEM fused, ancestor-sliced, per-level fallback — over a
+    leaf-count sweep, so the crossover the VMEM gate encodes is measured,
+    not assumed.
+
+    Interpret mode on CPU: absolute walls track *relative* cost only.
+    Each form is invoked directly (the full form under a raised budget,
+    the sliced form through ``ops._sliced_call``) — the ladder would
+    otherwise need a different budget override per (form, L) pair. The
+    slice granularity is coarse (tl=4096) to bound interpret-mode grid
+    unrolling; autotune owns the per-shape choice.
+    """
+    import functools
+
+    from repro.core.device_tree import build_ancestor_table
+    from repro.kernels import ops
+    from repro.kernels import traverse_fused as tf
+
+    fanout = 4
+    rng = np.random.default_rng(2)
+    Ls = (2048, 8192, 32768) if quick else (2048, 8192, 32768, 65536)
+    for L in Ls:
+        lm, lp = _synth_levels(L, fanout, rng)
+        sl = build_ancestor_table([np.asarray(p) for p in lp], tl=4096)
+        lo = rng.uniform(-1, 1, (B, 2))
+        w = rng.uniform(0, 0.05, (B, 2))
+        q = jnp.asarray(np.concatenate([lo, lo + w], 1), jnp.float32)
+        L128 = (L + 127) // 128 * 128
+
+        orig = tf.VMEM_BUDGET
+        try:
+            tf.VMEM_BUDGET = 1 << 40           # decide forms at trace time
+            full = jax.jit(functools.partial(ops.traverse_fused,
+                                             tb=B, tl=L128))
+            t_full = _med_time(lambda: full(q, lm, lp), reps=7)
+            sliced = jax.jit(lambda q_, lm_, lp_: ops._sliced_call(
+                q_, lm_, lp_, sl, B, True))
+            t_sliced = _med_time(lambda: sliced(q, lm, lp), reps=7)
+        finally:
+            tf.VMEM_BUDGET = orig
+        per_level = jax.jit(ops._per_level_kernel_mask)
+        t_pl = _med_time(lambda: per_level(q, lm, lp), reps=7)
+
+        extra = f"B={B},fanout={fanout},w_last={sl.widths[-1]}"
+        rows.append((f"scale_fused_full_L{L}_perleaf_ns",
+                     t_full / L * 1e9, extra))
+        rows.append((f"scale_sliced_L{L}_perleaf_ns",
+                     t_sliced / L * 1e9, extra))
+        rows.append((f"scale_per_level_L{L}_perleaf_ns",
+                     t_pl / L * 1e9, extra))
+
+
 def main(quick: bool = False) -> list:
     rows: list = []
     serving_throughput(rows, n_points=30_000 if quick else 120_000,
@@ -558,6 +611,7 @@ def main(quick: bool = False) -> list:
     traversal_micro(rows)
     compaction_micro(rows)
     ai_fusion_micro(rows)
+    scale_bench(rows, quick=quick)
     freshness_bench(rows, n_points=10_000 if quick else 30_000,
                     n_ins=1024 if quick else 2048)
     if not quick:

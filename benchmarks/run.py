@@ -11,12 +11,72 @@ One section per paper artifact:
 Prints ``name,value,derived`` CSV lines per benchmark. With ``--json`` the
 same rows are also written as structured JSON (name → {value, derived}) so
 the perf trajectory is machine-trackable across PRs (see BENCH_engine.json).
+
+With ``--check`` a fresh toy-scale micro run is compared row-by-row
+against the committed baseline (``BENCH_engine.json``): any timing row
+regressing past ``CHECK_TOLERANCE``× fails the run (nonzero exit) — the
+``make bench-smoke`` / CI regression guard. Throughput rows (`_qps`) fail
+on the inverse (fresh < baseline / tolerance). The band is wide because
+the CI container is noisy shared CPU — the guard catches order-of-
+magnitude dispatch regressions (a kernel silently dropping to a fallback
+rung), not single-digit-percent drift.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import traceback
+
+CHECK_TOLERANCE = 2.0
+_BASELINE = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "BENCH_engine.json")
+
+
+def check(baseline_path: str = _BASELINE,
+          tolerance: float = CHECK_TOLERANCE) -> int:
+    """Compare fresh toy-scale micro rows against the committed baseline.
+
+    Only rows present in both runs are compared (the baseline may carry
+    full-scale rows the toy run skips). Returns the number of regressions
+    (0 == pass).
+    """
+    from benchmarks import engine_bench
+
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f).get("engine_bench", {})
+    except (OSError, ValueError):
+        print("check: no readable baseline — nothing to compare")
+        return 0
+
+    rows: list = []
+    engine_bench.traversal_micro(rows)
+    engine_bench.compaction_micro(rows)
+    engine_bench.ai_fusion_micro(rows)
+    engine_bench.scale_bench(rows, quick=True)
+
+    bad = 0
+    for name, value, _extra in rows:
+        ent = base.get(name)
+        if not isinstance(ent, dict) or "value" not in ent:
+            continue
+        ref = float(ent["value"])
+        if ref <= 0 or value <= 0:
+            continue
+        if name.endswith("_qps"):
+            regressed = value < ref / tolerance
+            ratio = ref / value
+        else:
+            regressed = value > ref * tolerance
+            ratio = value / ref
+        flag = " REGRESSED" if regressed else ""
+        print(f"check: {name} fresh={value:.2f} base={ref:.2f} "
+              f"x{ratio:.2f}{flag}")
+        bad += int(regressed)
+    print(f"check: {bad} regression(s) past {tolerance}x")
+    return bad
 
 
 def _rows_to_dict(rows: list) -> dict:
@@ -51,7 +111,14 @@ def main() -> None:
                    help="run a single section by name")
     p.add_argument("--json", default=None, metavar="FILE",
                    help="also write results as structured JSON")
+    p.add_argument("--check", action="store_true",
+                   help="regression guard: fresh toy-scale micro rows vs "
+                        "the committed BENCH_engine.json; nonzero exit on "
+                        f">{CHECK_TOLERANCE}x regressions")
     args = p.parse_args()
+
+    if args.check:
+        sys.exit(1 if check() else 0)
 
     sections = []
     results: dict = {}

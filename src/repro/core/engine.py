@@ -92,11 +92,16 @@ def pad_tree_for_sharding(h: HybridTree, n_shards: int) -> HybridTree:
         pad = Lp - L
         never = jnp.asarray([np.inf, np.inf, -np.inf, -np.inf], jnp.float32)
         leaf = t.levels[-1]
+        # padding leaves repeat the last real parent (not 0): their
+        # never-rect MBRs keep them dead either way, but the repeat keeps
+        # the rebuilt ancestor windows tight (a 0 parent in the last leaf
+        # tile would stretch that tile's window back to the level start)
         new_leaf = Level(
             mbrs=jnp.concatenate(
                 [leaf.mbrs, jnp.tile(never[None], (pad, 1))]),
             parent=jnp.concatenate(
-                [leaf.parent, jnp.zeros((pad,), jnp.int32)]))
+                [leaf.parent,
+                 jnp.broadcast_to(leaf.parent[-1], (pad,))]))
         t = dataclasses.replace(
             t,
             levels=t.levels[:-1] + (new_leaf,),
@@ -111,6 +116,20 @@ def pad_tree_for_sharding(h: HybridTree, n_shards: int) -> HybridTree:
             leaf_counts=jnp.concatenate(
                 [t.leaf_counts, jnp.zeros((pad,), jnp.int32)]),
         )
+    # Re-anchor the ancestor-window table to the padded leaf axis. Inside
+    # shard_map each shard keeps its contiguous run of leaf tiles (starts
+    # columns shard with them — ``tree_shardings_p``) while internal
+    # levels stay replicated, so the table stays valid *iff* the tile
+    # grid divides evenly across shards; otherwise drop it and let
+    # dispatch fall back.
+    if t.aslices is not None:
+        tl_s = t.aslices.tl
+        if Lp % tl_s == 0 and (Lp // tl_s) % n_shards == 0:
+            from repro.core.device_tree import build_ancestor_table
+            t = dataclasses.replace(t, aslices=build_ancestor_table(
+                [np.asarray(lv.parent) for lv in t.levels], tl=tl_s))
+        else:
+            t = dataclasses.replace(t, aslices=None)
     from repro.core.aitree import bank_n_cells
     bank = h.ait.bank
     C = bank_n_cells(bank)
@@ -507,7 +526,12 @@ def tree_shardings_p(h: HybridTree, model_axis: str = "model"):
         leaf_entries=P(model_axis, None, None),
         leaf_entry_ids=P(model_axis, None),
         leaf_counts=P(model_axis),
-        n_points=t.n_points, max_entries=t.max_entries)
+        n_points=t.n_points, max_entries=t.max_entries,
+        # window starts shard along the tile axis with the leaf chunks
+        # they describe (internal levels stay replicated, so each shard's
+        # columns still hold valid global window indices)
+        aslices=None if t.aslices is None else dataclasses.replace(
+            t.aslices, starts=P(None, model_axis)))
     bank = h.ait.bank
     if isinstance(bank, KNNBank):
         bank_spec = dataclasses.replace(

@@ -51,7 +51,8 @@ def visited_leaf_mask(tree: DeviceTree, queries: jnp.ndarray,
         from repro.kernels import ops as kops
         return kops.traverse_fused(
             queries, [lv.mbrs for lv in tree.levels],
-            [lv.parent for lv in tree.levels])
+            [lv.parent for lv in tree.levels],
+            slices=getattr(tree, "aslices", None))
     return visited_leaf_mask_per_level(tree, queries, use_kernel=False)
 
 
@@ -211,7 +212,8 @@ def visited_leaves_compact(tree: DeviceTree, queries: jnp.ndarray, k: int,
         from repro.kernels import ops as kops
         idx, valid, count = kops.traverse_compact(
             queries, [lv.mbrs for lv in tree.levels],
-            [lv.parent for lv in tree.levels], k, tb=tile_b, tl=tile_l)
+            [lv.parent for lv in tree.levels], k, tb=tile_b, tl=tile_l,
+            slices=getattr(tree, "aslices", None))
     else:
         mask = visited_leaf_mask_per_level(tree, queries, use_kernel=False)
         idx, valid, count = compact_mask_counted(mask, k)

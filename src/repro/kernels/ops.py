@@ -132,22 +132,138 @@ def _per_level_kernel_mask(queries: jnp.ndarray, level_mbrs,
     return mask
 
 
+def _slices_usable(sl, n_levels: int, L: int) -> bool:
+    """Does this AncestorTable match the tree shape being dispatched?
+
+    A table built for a different padding/sharding of the same logical tree
+    (wrong tile count / level count) must be rejected, not trusted."""
+    if sl is None:
+        return False
+    try:
+        st = sl.starts
+        return (getattr(st, "ndim", 0) == 2
+                and st.shape[0] == n_levels - 1
+                and len(sl.widths) == n_levels - 1
+                and st.shape[1] == -(-L // sl.tl))
+    except (AttributeError, TypeError):
+        return False
+
+
+def _build_slices_if_concrete(level_parents, B: int, L: int,
+                              n_levels: int, interp: bool):
+    """Build an ancestor table on the fly for callers that passed raw
+    level arrays (no ``DeviceTree``) — only possible outside a trace,
+    where the parent arrays are concrete."""
+    if any(isinstance(p, jax.core.Tracer) for p in level_parents):
+        return None
+    tune = _traverse.tuned_tiles_for_key(
+        _traverse.tune_key_sliced(B, L, n_levels, interp))
+    from repro.core.device_tree import build_ancestor_table
+    return build_ancestor_table(level_parents,
+                                tl=tune.get("tl") or _traverse.DEF_TL)
+
+
+def _sliced_operands(queries: jnp.ndarray, level_mbrs, level_parents,
+                     sl, tb: int):
+    """Pad + transpose for the sliced kernels: each internal level to a
+    multiple of its window width (BlockSpec windows must tile the padded
+    axis), the leaf level to the table's tile granularity. Pad lanes carry
+    never-intersecting rects, so whatever window they land in they stay
+    dead; the leaf parent pad repeats the last real parent so pad lanes
+    index in-window (dead via their never-rects, not via wraparound)."""
+    never = jnp.asarray(_NEVER_RECT, jnp.float32)
+
+    def pad_level(mbrs, parent, mult, pfill):
+        n = mbrs.shape[0]
+        mp = _pad_to(mbrs.astype(jnp.float32), 0, mult, 0.0)
+        if mp.shape[0] != n:
+            mp = mp.at[n:].set(never)
+        pp = parent.astype(jnp.int32)
+        pad = (-n) % mult
+        if pad:
+            pp = jnp.concatenate(
+                [pp, jnp.full((pad,), pfill, jnp.int32)])
+        return mp.T, pp[None, :]
+
+    qp = _pad_to(queries.astype(jnp.float32), 0, tb, 0.0)
+    int_mbrs_t, int_parents = [], []
+    for lvl in range(len(level_mbrs) - 1):
+        mt, pt = pad_level(level_mbrs[lvl], level_parents[lvl],
+                           sl.widths[lvl], 0)
+        int_mbrs_t.append(mt)
+        if lvl > 0:
+            int_parents.append(pt)
+    leaf_mt, leaf_pt = pad_level(level_mbrs[-1], level_parents[-1], sl.tl,
+                                 level_parents[-1][-1])
+    return qp, tuple(int_mbrs_t), tuple(int_parents), leaf_mt, leaf_pt
+
+
+def _sliced_call(queries: jnp.ndarray, level_mbrs, level_parents, sl,
+                 tb: int, interp: bool, *, k: int | None = None):
+    """Dispatch to the ancestor-sliced kernel form; ``None`` when the
+    table is unusable or even the sliced working set exceeds the budget
+    (degenerate tables whose windows capped out at full level width).
+
+    ``k=None`` → dense mask [Bp, Lp]; else → ``(idx [Bp, KP], cnt
+    [Bp, 1])`` with ``traverse_compact_t``'s slot contract.
+    """
+    if sl is None:
+        return None
+    n_levels = len(level_mbrs)
+    B = queries.shape[0]
+    L = level_mbrs[-1].shape[0]
+    stune = _traverse.tuned_tiles_for_key(
+        _traverse.tune_key_sliced(B, L, n_levels, interp))
+    tb = stune.get("tb") or tb
+    sub_tl = stune.get("sub_tl", _traverse.SUB_TL)
+    kc = stune.get("kc", _traverse.COMPACT_KC)
+    if k is None:
+        est = _traverse.vmem_estimate_sliced(sl.widths, tb, sl.tl,
+                                             tpu_form=not interp)
+    else:
+        kp = k if interp else \
+            (k + _traverse.LANE - 1) // _traverse.LANE * _traverse.LANE
+        est = _traverse.vmem_estimate_sliced_compact(
+            sl.widths, tb, sl.tl, kp, tpu_form=not interp, kc=kc)
+    if est > _traverse.VMEM_BUDGET:
+        return None
+    qp, int_mbrs_t, int_parents, leaf_mt, leaf_pt = _sliced_operands(
+        queries, level_mbrs, level_parents, sl, tb)
+    if k is None:
+        return _traverse.traverse_fused_sliced_t(
+            sl.starts, qp.T, int_mbrs_t, int_parents, leaf_mt, leaf_pt,
+            widths=sl.widths, tb=tb, tl=sl.tl, sub_tl=sub_tl,
+            interpret=interp)
+    return _traverse.traverse_compact_sliced_t(
+        sl.starts, qp.T, int_mbrs_t, int_parents, leaf_mt, leaf_pt,
+        k=k, widths=sl.widths, tb=tb, tl=sl.tl, sub_tl=sub_tl, kc=kc,
+        interpret=interp)
+
+
 def traverse_fused(queries: jnp.ndarray, level_mbrs, level_parents,
-                   tb: int | None = None, tl: int | None = None
-                   ) -> jnp.ndarray:
+                   tb: int | None = None, tl: int | None = None,
+                   slices=None) -> jnp.ndarray:
     """Fused root→leaf traversal: [B, 4] → visited-leaf mask [B, L] bool.
 
     ``level_mbrs``: one [N_l, 4] array per tree level, root first, leaf
     level last. ``level_parents``: matching [N_l] i32 index into the level
     above (entry 0 unused). Single ``pallas_call`` — the internal frontier
-    stays in VMEM; only the leaf mask is written to HBM.
+    stays in VMEM; only the leaf mask is written to HBM. ``slices`` is the
+    tree's ``AncestorTable`` (``DeviceTree.aslices``), if the caller has
+    one.
 
     Falls back to the jnp oracle when kernels are off; when the tree is a
-    single level (root == leaves) it is one ``mbr_intersect``; and when the
-    estimated VMEM working set (frontier scratch + replicated internal
-    operands + largest one-hot expansion) exceeds the budget, it runs the
-    level-by-level loop with the ``mbr_intersect`` *kernel* per level —
-    never a silent drop to pure jnp.
+    single level (root == leaves) it is one ``mbr_intersect``. When the
+    estimated full-replication VMEM working set (frontier scratch +
+    replicated internal operands + largest one-hot expansion) exceeds the
+    budget, the **ancestor-sliced** form takes over — same fused walk, but
+    each leaf tile stages only its scalar-prefetched ancestor windows, so
+    the working set no longer grows with the tree (the table comes from
+    ``slices``, or is built on the fly when the parent arrays are
+    concrete). Only when even that is impossible (tracing without a table,
+    or a degenerate table whose windows capped out at full level width)
+    does it run the level-by-level loop with the ``mbr_intersect``
+    *kernel* per level — never a silent drop to pure jnp.
     """
     n_levels = len(level_mbrs)
     B = queries.shape[0]
@@ -162,6 +278,13 @@ def traverse_fused(queries: jnp.ndarray, level_mbrs, level_parents,
     widths = [int(m.shape[0]) for m in level_mbrs[:-1]]
     padded = [n + (-n) % _traverse.LANE for n in widths]
     if _traverse.vmem_estimate(padded, tb, tl) > _traverse.VMEM_BUDGET:
+        sl = slices if _slices_usable(slices, n_levels, L) else \
+            _build_slices_if_concrete(level_parents, B, L, n_levels,
+                                      interp)
+        out = _sliced_call(queries, level_mbrs, level_parents, sl, tb,
+                           interp)
+        if out is not None:
+            return out[:B, :L]
         return _per_level_kernel_mask(queries, level_mbrs, level_parents)
     qp, int_mbrs_t, int_parents, leaf_mt, leaf_pt = _fused_operands(
         queries, level_mbrs, level_parents, tb, tl)
@@ -172,7 +295,8 @@ def traverse_fused(queries: jnp.ndarray, level_mbrs, level_parents,
 
 
 def traverse_compact(queries: jnp.ndarray, level_mbrs, level_parents,
-                     k: int, tb: int | None = None, tl: int | None = None
+                     k: int, tb: int | None = None, tl: int | None = None,
+                     slices=None
                      ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused traversal + compaction: [B, 4] → ``(leaf_idx [B, k] i32,
     valid [B, k] bool, count [B] i32)``.
@@ -186,9 +310,11 @@ def traverse_compact(queries: jnp.ndarray, level_mbrs, level_parents,
     ``traverse_fused`` mask.
 
     The fallback ladder mirrors ``traverse_fused`` (jnp oracle when kernels
-    are off, one ``mbr_intersect`` for single-level trees, per-level kernel
-    loop when over the VMEM budget); the fallbacks compact the dense mask
-    with the jnp ``compact_mask`` scheme, so every path is bit-identical.
+    are off, one ``mbr_intersect`` for single-level trees, the
+    ancestor-sliced kernel when over the full-replication VMEM budget, the
+    per-level kernel loop only as last resort); the dense-mask fallbacks
+    compact with the jnp ``compact_mask`` scheme, so every path is
+    bit-identical.
     """
     from repro.core.traversal import compact_mask_counted
 
@@ -212,6 +338,17 @@ def traverse_compact(queries: jnp.ndarray, level_mbrs, level_parents,
     if _traverse.vmem_estimate_compact(padded, tb, tl, kp,
                                        tpu_form=not interp, kc=kc) > \
             _traverse.VMEM_BUDGET:
+        sl = slices if _slices_usable(slices, n_levels, L) else \
+            _build_slices_if_concrete(level_parents, B, L, n_levels,
+                                      interp)
+        out = _sliced_call(queries, level_mbrs, level_parents, sl, tb,
+                           interp, k=k)
+        if out is not None:
+            idx, cnt = out
+            count = cnt[:B, 0]
+            valid = jnp.arange(k, dtype=jnp.int32)[None, :] < \
+                count[:, None]
+            return jnp.where(valid, idx[:B, :k], 0), valid, count
         return compact_mask_counted(
             _per_level_kernel_mask(queries, level_mbrs, level_parents), k)
     qp, int_mbrs_t, int_parents, leaf_mt, leaf_pt = _fused_operands(

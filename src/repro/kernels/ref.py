@@ -34,6 +34,60 @@ def traverse_fused(queries: jnp.ndarray, level_mbrs, level_parents
     return mask
 
 
+def traverse_fused_sliced(queries: jnp.ndarray, level_mbrs, level_parents,
+                          starts, widths, tl: int) -> jnp.ndarray:
+    """Windowed twin of ``traverse_fused`` — ground truth for the
+    ancestor-sliced kernels' window semantics: [B, 4] → [B, L] bool.
+
+    Per leaf tile the walk sees only each internal level's
+    ``widths[l]``-wide window at element offset ``starts[l, t] *
+    widths[l]`` (the ``AncestorTable`` contract); parent indices are
+    rebased window-relative and out-of-window ones masked dead. With a
+    correctly built table this equals ``traverse_fused`` exactly — that
+    equality is what the tests assert.
+    """
+    never = jnp.array([1.0, 1.0, 0.0, 0.0], jnp.float32)
+
+    def window(mbrs, parent, s, w):
+        n = mbrs.shape[0]
+        pad = max(0, s + w - n)
+        if pad:
+            mbrs = jnp.concatenate(
+                [mbrs.astype(jnp.float32),
+                 jnp.broadcast_to(never, (pad, 4))])
+            parent = jnp.concatenate(
+                [parent, jnp.zeros((pad,), parent.dtype)])
+        return mbrs[s:s + w], parent[s:s + w]
+
+    n_int = len(level_mbrs) - 1
+    L = level_mbrs[-1].shape[0]
+    starts = jnp.asarray(starts)
+    outs = []
+    for t in range(-(-L // tl)):
+        mask = None
+        prev_s = 0
+        for l in range(n_int):
+            s = int(starts[l, t]) * widths[l]
+            wm, wp = window(jnp.asarray(level_mbrs[l]),
+                            jnp.asarray(level_parents[l]), s, widths[l])
+            hit = mbr_intersect(queries, wm)
+            if l == 0:
+                mask = hit
+            else:
+                rel = wp - prev_s
+                ok = (rel >= 0) & (rel < widths[l - 1])
+                mask = (mask[:, jnp.clip(rel, 0, widths[l - 1] - 1)]
+                        & ok[None, :] & hit)
+            prev_s = s
+        lm = jnp.asarray(level_mbrs[-1])[t * tl:(t + 1) * tl]
+        lp = jnp.asarray(level_parents[-1])[t * tl:(t + 1) * tl]
+        rel = lp - prev_s
+        ok = (rel >= 0) & (rel < widths[-1])
+        outs.append(mask[:, jnp.clip(rel, 0, widths[-1] - 1)]
+                    & ok[None, :] & mbr_intersect(queries, lm))
+    return jnp.concatenate(outs, axis=1)
+
+
 def spatial_key(cxy: jnp.ndarray, curve: str = "hilbert",
                 order: int = 15) -> jnp.ndarray:
     """Space-filling-curve keys: ``cxy`` [B, 2] f32 in [0, 1) → [B] i32.

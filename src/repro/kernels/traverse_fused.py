@@ -68,9 +68,27 @@ COMPACT_KC = 8
 # VMEM budget (bytes) for the TPU-form kernel's resident working set —
 # frontier scratch, replicated internal-level operands, and the largest
 # one-hot expansion matrix. Real VMEM is ~16 MiB/core; leave headroom for
-# double buffering. ops.py estimates the working set per tree and falls
-# back to the level-by-level path when it exceeds this.
-VMEM_BUDGET = 8 * 1024 * 1024
+# double buffering. ops.py estimates the working set per tree and routes
+# over-budget trees to the ancestor-sliced form (per-level kernel loop as
+# the last resort). Overridable via the REPRO_VMEM_BUDGET env var (bytes;
+# read once at import) so the gate can be tuned per platform — and so
+# tests can force every dispatch rung deterministically.
+VMEM_BUDGET_ENV = "REPRO_VMEM_BUDGET"
+DEF_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _read_vmem_budget(env: dict | None = None) -> int:
+    """Parse the budget override (invalid / non-positive values fall back
+    to the default — a typo'd env var must not disable every kernel)."""
+    raw = (env if env is not None else os.environ).get(VMEM_BUDGET_ENV, "")
+    try:
+        v = int(raw)
+    except (TypeError, ValueError):
+        return DEF_VMEM_BUDGET
+    return v if v > 0 else DEF_VMEM_BUDGET
+
+
+VMEM_BUDGET = _read_vmem_budget()
 
 # ---------------------------------------------------------------------------
 # Autotune cache: the constants above are hand-picked fallbacks; a sweep
@@ -100,6 +118,12 @@ def _load_autotune(path: str) -> dict:
 def tune_key(B: int, L: int, n_levels: int, interp: bool) -> str:
     """Cache key for one dispatch shape (exact match, no interpolation)."""
     return f"{'interp' if interp else 'tpu'}:B{B}:L{L}:H{n_levels}"
+
+
+def tune_key_sliced(B: int, L: int, n_levels: int, interp: bool) -> str:
+    """Cache key for the ancestor-sliced form (own knob space: its ``tl``
+    is the slice granularity baked into the table, not a block choice)."""
+    return f"sliced-{'interp' if interp else 'tpu'}:B{B}:L{L}:H{n_levels}"
 
 
 def tuned_tiles(B: int, L: int, n_levels: int, interp: bool) -> dict:
@@ -167,6 +191,45 @@ def vmem_estimate_compact(int_widths_padded: Sequence[int], tb: int, tl: int,
     fallback.
     """
     est = vmem_estimate(int_widths_padded, tb, tl)
+    est -= tb * tl                          # no [tb, tl] bool output tile
+    est += tb * (kp + 1) * 4                # slot table + count accumulators
+    est += tb * tl * (kc if tpu_form else 1) * 4  # epilogue transient
+    return est
+
+
+def vmem_estimate_sliced(widths: Sequence[int], tb: int, tl: int,
+                         tpu_form: bool = True) -> int:
+    """VMEM working-set bytes for the ancestor-sliced fused traversal.
+
+    ``widths``: per-internal-level *window* widths (the AncestorTable's,
+    root first) — the sliced kernel stages one window per level instead of
+    the whole level, and recomputes the walk per (query, leaf) tile, so
+    there is no persistent frontier scratch; the frontier exists only as a
+    ``[tb, widths[-1]]`` transient. The one-hot expansion operands shrink
+    to window×window; the interpret form gathers instead (its transient is
+    the ``[tb, tl]`` mask), mirroring ``vmem_estimate_compact``'s
+    form-awareness so CPU runs aren't gated on MXU-only transients.
+    """
+    w_last = widths[-1]
+    est = sum(4 * w * 4 + w * 4 for w in widths)     # window mbrs + parents
+    est += 4 * tb * 4 + 4 * tl * 4 + tl * 4 + tb * tl  # q, leaf, out
+    est += tb * w_last * 4                            # frontier transient
+    if tpu_form:
+        onehots = [a * b for a, b in zip(widths[:-1], widths[1:])]
+        onehots.append(w_last * tl)
+        est += max(onehots) * 4
+    else:
+        est += tb * tl * 4
+    return est
+
+
+def vmem_estimate_sliced_compact(widths: Sequence[int], tb: int, tl: int,
+                                 kp: int, tpu_form: bool = True,
+                                 kc: int = COMPACT_KC) -> int:
+    """Sliced-walk analogue of ``vmem_estimate_compact``: same window
+    terms as ``vmem_estimate_sliced``, the mask output tile swapped for
+    the slot table + count accumulators plus the epilogue transient."""
+    est = vmem_estimate_sliced(widths, tb, tl, tpu_form=tpu_form)
     est -= tb * tl                          # no [tb, tl] bool output tile
     est += tb * (kp + 1) * 4                # slot table + count accumulators
     est += tb * tl * (kc if tpu_form else 1) * 4  # epilogue transient
@@ -605,3 +668,321 @@ def traverse_compact_t(q_t: jnp.ndarray,
         scratch_shapes=[pltpu.VMEM((tb, n_last), jnp.float32)],
         interpret=interpret,
     )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Ancestor-sliced form: same walk, windowed operands.
+#
+# The full-VMEM kernels above replicate every internal level into VMEM —
+# fine while the tree is small, impossible past the budget. The sliced form
+# exploits the flatten's sibling contiguity (each leaf tile's ancestor set
+# per level is a contiguous index range): a host-built AncestorTable
+# (``core.device_tree.build_ancestor_table``) records one block-aligned
+# window per (internal level, leaf tile), the window starts ride in through
+# scalar prefetch, and each grid cell's BlockSpecs stage only its tile's
+# windows. Parent indices are rebased in-kernel (global − window start);
+# out-of-window relative indices can only belong to padding lanes, whose
+# never-intersecting MBRs are dead regardless (true-range ancestors land
+# in-window by the table's min/max construction). The walk reruns per
+# (query, leaf) tile over the small windows instead of persisting a
+# frontier scratch across leaf tiles — that rerun is the price of a VMEM
+# working set that no longer grows with the tree.
+# ---------------------------------------------------------------------------
+
+
+def _walk_sliced_tpu(q, int_m, int_rel, widths, n_int: int):
+    """TPU-form windowed internal walk → frontier value [TB, widths[-1]].
+
+    ``int_m``: per-level window MBR blocks; ``int_rel``: per-level
+    window-relative parent rows (levels 1..) as values.
+    """
+    mask = _tile_intersect(q, int_m[0][:, :]).astype(jnp.float32)
+    for l in range(1, n_int):
+        alive = _expand_mxu(mask, int_rel[l - 1], widths[l - 1])
+        hit = _tile_intersect(q, int_m[l][:, :])
+        mask = jnp.where((alive > 0.0) & hit, 1.0, 0.0)
+    return mask
+
+
+def _leaf_mask_interp_sliced(q, int_m, int_rel, lm_v, leaf_rel, widths,
+                             n_int: int, tb: int, tl: int,
+                             sub_tl: int = SUB_TL):
+    """Interpret-form sliced leaf mask as a value (no ref writes).
+
+    Mirrors ``_leaf_mask_interp`` — value-level ``lax.cond`` early exits
+    on in-kernel bounding boxes, lane gathers instead of one-hot matmuls —
+    but over windowed operands: gathers use clamped window-relative parent
+    indices with an explicit in-window validity mask (clamping alone would
+    alias padding lanes onto real window slots).
+    """
+
+    def subtile_hit(sm):
+        return jnp.any((q[0, :] <= jnp.max(sm[2, :]))
+                       & (jnp.min(sm[0, :]) <= q[2, :])
+                       & (q[1, :] <= jnp.max(sm[3, :]))
+                       & (jnp.min(sm[1, :]) <= q[3, :]))
+
+    def live():
+        int_all = jnp.concatenate([m[:, :] for m in int_m], axis=1)
+        hit_all = _tile_intersect(q, int_all)        # [TB, Σwidths]
+        off = widths[0]
+        mask = hit_all[:, :off]
+        for l in range(1, n_int):
+            rel = int_rel[l - 1]
+            ok = (rel >= 0) & (rel < widths[l - 1])
+            g = mask[:, jnp.clip(rel, 0, widths[l - 1] - 1)]
+            mask = g & ok[None, :] & hit_all[:, off:off + widths[l]]
+            off += widths[l]
+        outs = []
+        w_last = widths[-1]
+        for s in range(0, tl, sub_tl):
+            e = min(s + sub_tl, tl)
+            sm = lm_v[:, s:e]
+            rel = leaf_rel[s:e]
+            ok = (rel >= 0) & (rel < w_last)
+            outs.append(jax.lax.cond(
+                subtile_hit(sm),
+                lambda sm=sm, rel=rel, ok=ok:
+                mask[:, jnp.clip(rel, 0, w_last - 1)] & ok[None, :]
+                & _tile_intersect(q, sm),
+                lambda e=e, s=s: jnp.zeros((tb, e - s), jnp.bool_)))
+        return outs[0] if len(outs) == 1 else \
+            jnp.concatenate(outs, axis=1)
+
+    tile_live = subtile_hit(lm_v)
+    mask = jax.lax.cond(tile_live, live,
+                        lambda: jnp.zeros((tb, tl), jnp.bool_))
+    return mask, tile_live
+
+
+def _sliced_refs(refs, n_int: int):
+    """Unpack the sliced kernels' ref list (scalar-prefetch ref first)."""
+    s_ref = refs[0]
+    q_ref = refs[1]
+    int_m = refs[2:2 + n_int]                        # [4, w_l] windows
+    int_p = refs[2 + n_int:1 + 2 * n_int]            # [1, w_l], levels 1..
+    leaf_m = refs[1 + 2 * n_int]                     # [4, TL]
+    leaf_p = refs[2 + 2 * n_int]                     # [1, TL]
+    return s_ref, q_ref, int_m, int_p, leaf_m, leaf_p
+
+
+def _sliced_rel_rows(s_ref, int_p, leaf_p, widths, n_int: int, j):
+    """Window-relative parent rows (values): global − window start."""
+    int_rel = [int_p[l - 1][0, :] - s_ref[l - 1, j] * widths[l - 1]
+               for l in range(1, n_int)]
+    leaf_rel = leaf_p[0, :] - s_ref[n_int - 1, j] * widths[n_int - 1]
+    return int_rel, leaf_rel
+
+
+def _make_sliced_kernel(n_int: int, widths, tb: int, tl: int,
+                        tpu_form: bool, sub_tl: int = SUB_TL):
+    """Mask-output kernel body over windowed operands.
+
+    Same forms as ``_make_kernel``; the walk runs per grid cell over the
+    tile's windows (no frontier scratch — nothing persists across ``j``),
+    with the same ``pl.when`` dead-tile early exit on the leaf expansion.
+    """
+
+    def kernel(*refs):
+        s_ref, q_ref, int_m, int_p, leaf_m, leaf_p = _sliced_refs(refs,
+                                                                  n_int)
+        o_ref = refs[3 + 2 * n_int]                  # [TB, TL] bool
+        j = pl.program_id(1)
+        q = q_ref[:, :]
+        int_rel, leaf_rel = _sliced_rel_rows(s_ref, int_p, leaf_p, widths,
+                                             n_int, j)
+
+        if tpu_form:
+            frontier = _walk_sliced_tpu(q, int_m, int_rel, widths, n_int)
+            alive = _expand_mxu(frontier, leaf_rel, widths[-1])
+            any_live = jnp.max(alive) > 0.0
+
+            @pl.when(jnp.logical_not(any_live))
+            def _dead_tile():
+                o_ref[:, :] = jnp.zeros((tb, tl), jnp.bool_)
+
+            @pl.when(any_live)
+            def _live_tile():
+                o_ref[:, :] = (alive > 0.0) & _tile_intersect(
+                    q, leaf_m[:, :])
+        else:
+            o_ref[:, :] = _leaf_mask_interp_sliced(
+                q, int_m, int_rel, leaf_m[:, :], leaf_rel, widths, n_int,
+                tb, tl, sub_tl)[0]
+
+    return kernel
+
+
+def _make_sliced_compact_kernel(n_int: int, widths, tb: int, tl: int,
+                                kp: int, tpu_form: bool,
+                                sub_tl: int = SUB_TL, kc: int = COMPACT_KC):
+    """Sliced traversal + the shared compaction epilogues.
+
+    Identical slot semantics to ``_make_compact_kernel`` (revisited
+    ``(i, 0)`` output blocks carry the running rank base across leaf
+    tiles); only the walk's operands differ. The interpret form always
+    uses the cross-tile epilogue — the sliced form exists precisely
+    because the leaf axis spans multiple tiles.
+    """
+
+    def kernel(*refs):
+        s_ref, q_ref, int_m, int_p, leaf_m, leaf_p = _sliced_refs(refs,
+                                                                  n_int)
+        idx_ref = refs[3 + 2 * n_int]                # [TB, KP] i32 (i, 0)
+        cnt_ref = refs[4 + 2 * n_int]                # [TB, 1] i32 (i, 0)
+        j = pl.program_id(1)
+        q = q_ref[:, :]
+        int_rel, leaf_rel = _sliced_rel_rows(s_ref, int_p, leaf_p, widths,
+                                             n_int, j)
+
+        if tpu_form:
+            col = j * tl + jax.lax.broadcasted_iota(jnp.int32, (tb, tl), 1)
+
+            @pl.when(j == 0)
+            def _init():
+                idx_ref[:, :] = jnp.zeros((tb, kp), jnp.int32)
+                cnt_ref[:, :] = jnp.zeros((tb, 1), jnp.int32)
+
+            frontier = _walk_sliced_tpu(q, int_m, int_rel, widths, n_int)
+            alive = _expand_mxu(frontier, leaf_rel, widths[-1])
+            any_live = jnp.max(alive) > 0.0
+
+            @pl.when(any_live)
+            def _live_tile():
+                mask = (alive > 0.0) & _tile_intersect(q, leaf_m[:, :])
+                _compact_epilogue_tpu(mask, col, idx_ref, cnt_ref, kp, kc)
+        else:
+            mask, _ = _leaf_mask_interp_sliced(
+                q, int_m, int_rel, leaf_m[:, :], leaf_rel, widths, n_int,
+                tb, tl, sub_tl)
+            _compact_epilogue_interp(mask, j, tl, kp, idx_ref, cnt_ref)
+
+    return kernel
+
+
+def _sliced_grid_spec(n_int: int, widths, tb: int, tl: int, grid,
+                      out_specs):
+    """PrefetchScalarGridSpec shared by both sliced entry points: the
+    ``[n_int, n_tiles]`` window-start table is the scalar-prefetch operand,
+    and every internal level's BlockSpec indexes its block by the tile's
+    prefetched start (index maps receive grid indices then the scalar
+    ref)."""
+    in_specs = [pl.BlockSpec((4, tb), lambda i, j, s: (0, i))]
+    in_specs += [pl.BlockSpec((4, widths[l]),
+                              lambda i, j, s, l=l: (0, s[l, j]))
+                 for l in range(n_int)]
+    in_specs += [pl.BlockSpec((1, widths[l]),
+                              lambda i, j, s, l=l: (0, s[l, j]))
+                 for l in range(1, n_int)]
+    in_specs += [
+        pl.BlockSpec((4, tl), lambda i, j, s: (0, j)),
+        pl.BlockSpec((1, tl), lambda i, j, s: (0, j)),
+    ]
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+        out_specs=out_specs)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("widths", "tb", "tl", "sub_tl",
+                                    "interpret", "tpu_form"))
+def traverse_fused_sliced_t(starts: jnp.ndarray,
+                            q_t: jnp.ndarray,
+                            int_mbrs_t: Sequence[jnp.ndarray],
+                            int_parents: Sequence[jnp.ndarray],
+                            leaf_mbrs_t: jnp.ndarray,
+                            leaf_parent: jnp.ndarray, *,
+                            widths: tuple, tb: int = DEF_TB,
+                            tl: int = DEF_TL, sub_tl: int = SUB_TL,
+                            interpret: bool = False,
+                            tpu_form: bool | None = None) -> jnp.ndarray:
+    """Ancestor-sliced transposed-layout entry point → [B, L] bool.
+
+    ``starts`` [n_int, L//tl] i32 block-index window starts (the
+    AncestorTable's, sharded rows matching the leaf shard if any);
+    ``widths`` the matching static window widths. ``int_mbrs_t`` /
+    ``int_parents`` follow ``traverse_fused_t``'s layout but each level
+    must be padded to a multiple of its window width (ops.py does). B must
+    be a multiple of ``tb`` and L of ``tl``.
+    """
+    if tpu_form is None:
+        tpu_form = not interpret
+    n_int = len(int_mbrs_t)
+    assert n_int >= 1 and len(int_parents) == n_int - 1
+    assert len(widths) == n_int and starts.shape[0] == n_int
+    _, B = q_t.shape
+    _, L = leaf_mbrs_t.shape
+    assert B % tb == 0 and L % tl == 0, (B, L, tb, tl)
+    assert starts.shape[1] == L // tl, (starts.shape, L, tl)
+    for m, w in zip(int_mbrs_t, widths):
+        assert m.shape[1] % w == 0, (m.shape, w)
+    grid = (B // tb, L // tl)
+
+    args = ([q_t.astype(jnp.float32)]
+            + [m.astype(jnp.float32) for m in int_mbrs_t]
+            + [p.astype(jnp.int32) for p in int_parents]
+            + [leaf_mbrs_t.astype(jnp.float32),
+               leaf_parent.astype(jnp.int32)])
+
+    return pl.pallas_call(
+        _make_sliced_kernel(n_int, widths, tb, tl, tpu_form=tpu_form,
+                            sub_tl=sub_tl),
+        grid_spec=_sliced_grid_spec(
+            n_int, widths, tb, tl, grid,
+            pl.BlockSpec((tb, tl), lambda i, j, s: (i, j))),
+        out_shape=jax.ShapeDtypeStruct((B, L), jnp.bool_),
+        interpret=interpret,
+    )(starts.astype(jnp.int32), *args)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "widths", "tb", "tl", "sub_tl",
+                                    "kc", "interpret", "tpu_form"))
+def traverse_compact_sliced_t(starts: jnp.ndarray,
+                              q_t: jnp.ndarray,
+                              int_mbrs_t: Sequence[jnp.ndarray],
+                              int_parents: Sequence[jnp.ndarray],
+                              leaf_mbrs_t: jnp.ndarray,
+                              leaf_parent: jnp.ndarray, *,
+                              k: int, widths: tuple, tb: int = DEF_TB,
+                              tl: int = DEF_TL, sub_tl: int = SUB_TL,
+                              kc: int = COMPACT_KC,
+                              interpret: bool = False,
+                              tpu_form: bool | None = None
+                              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Ancestor-sliced traversal + compaction → ``(leaf_idx [B, KP] i32,
+    count [B, 1] i32)``; operand/slot contracts as ``traverse_compact_t``
+    (KP lane-rounded in TPU form, exactly ``k`` interp), windows as
+    ``traverse_fused_sliced_t``.
+    """
+    if tpu_form is None:
+        tpu_form = not interpret
+    n_int = len(int_mbrs_t)
+    assert n_int >= 1 and len(int_parents) == n_int - 1
+    assert len(widths) == n_int and starts.shape[0] == n_int
+    _, B = q_t.shape
+    _, L = leaf_mbrs_t.shape
+    assert B % tb == 0 and L % tl == 0, (B, L, tb, tl)
+    assert starts.shape[1] == L // tl, (starts.shape, L, tl)
+    kp = (k + LANE - 1) // LANE * LANE if tpu_form else k
+    assert kp % kc == 0 or not tpu_form, (kp, kc)
+    grid = (B // tb, L // tl)
+
+    args = ([q_t.astype(jnp.float32)]
+            + [m.astype(jnp.float32) for m in int_mbrs_t]
+            + [p.astype(jnp.int32) for p in int_parents]
+            + [leaf_mbrs_t.astype(jnp.float32),
+               leaf_parent.astype(jnp.int32)])
+
+    return pl.pallas_call(
+        _make_sliced_compact_kernel(n_int, widths, tb, tl, kp,
+                                    tpu_form=tpu_form, sub_tl=sub_tl,
+                                    kc=kc),
+        grid_spec=_sliced_grid_spec(
+            n_int, widths, tb, tl, grid,
+            [pl.BlockSpec((tb, kp), lambda i, j, s: (i, 0)),
+             pl.BlockSpec((tb, 1), lambda i, j, s: (i, 0))]),
+        out_shape=[jax.ShapeDtypeStruct((B, kp), jnp.int32),
+                   jax.ShapeDtypeStruct((B, 1), jnp.int32)],
+        interpret=interpret,
+    )(starts.astype(jnp.int32), *args)
