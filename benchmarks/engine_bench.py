@@ -512,6 +512,153 @@ def freshness_smoke(rows: list) -> None:
                  f"{mixed.n_repacks}repack,oracle=exact"))
 
 
+def refit_bench(rows: list, quick: bool = False) -> None:
+    """Incremental ``build.refit_cells`` vs a from-scratch fit.
+
+    The instance-optimization loop's cost claim: when a localized change
+    dirties ≤ 25% of the grid cells, retraining just those cells (chunk
+    relabel + per-cell train + splice + partial recertify) must beat the
+    full pipeline (full relabel + all-cell train + full certify) by a
+    wide margin — the per-cell training pipeline's bit-determinism makes
+    the two *results* identical, so the rows measure pure cost. Both
+    sides include their labelling work (refit relabels internally; the
+    full side pays ``make_workload``).
+
+    Gate: ≥5x for the knn bank (fit cost scales with the touched query/
+    cell set, so the ratio tracks the dirty fraction directly). The mlp
+    row is asserted at a lower floor on this CPU harness: the Adam epoch
+    loop has a fixed per-step dispatch cost that dominates tiny cell
+    batches, flattening the trained-cells ratio (20 vs 100 cells ≈ 3.5x
+    wall here); on an accelerator the per-epoch cost is matmul-bound and
+    the ratio recovers toward cells_full/cells_chunk."""
+    import dataclasses as dc
+
+    from repro.core import build as buildlib
+
+    floor = {"knn": 5.0, "mlp": 2.5}
+    for kind in ("knn", "mlp"):
+        pts = synth.tweets_like(4000 if quick else 6000, seed=0)
+        tree = RTree(max_entries=32).insert_all(pts)
+        dtree = dt.flatten(tree)
+        qs = synth.synth_queries(pts, 1e-3, 300 if quick else 500, seed=1)
+        lkw = {"max_results": 2048}
+        wl = labels.make_workload(dtree, qs, **lkw)
+        kw = dict(kind=kind, grid_sizes=(10,), label_kwargs=lkw)
+        if kind == "mlp":
+            kw.update(mlp_hidden=32, mlp_epochs=200 if quick else 400)
+        hyb, rep = buildlib.fit_airtree(dtree, wl, **kw)
+        state = rep.fit_state
+
+        # localized inserts: one tight cluster in a data corner, through
+        # the host tree's dynamic insert path (split cascades included)
+        rng = np.random.default_rng(7)
+        lo, hi = pts.min(axis=0), pts.max(axis=0)
+        corner = lo + 0.02 * (hi - lo)
+        newp = (corner + np.abs(rng.normal(0, 0.001, (20, 2)))
+                ).astype(np.float32)
+        tree.insert_all(newp)
+        dtree2 = dt.flatten(tree)
+        hyb2 = dc.replace(hyb, tree=dtree2)
+
+        _, s_chk, r_chk = buildlib.refit_cells(hyb2, state)
+        frac = r_chk.cells_changed / state.n_cells
+        assert frac <= 0.25, \
+            f"scenario must stay localized, got {frac:.0%} cells changed"
+
+        def inc():
+            buildlib.refit_cells(hyb2, state)
+            return jnp.zeros(())
+
+        def full():
+            wl2 = labels.make_workload(dtree2, qs, **lkw)
+            kwf = dict(kw, max_labels=state.cl, max_queries=state.qp)
+            buildlib.fit_airtree(dtree2, wl2, **kwf)
+            return jnp.zeros(())
+
+        t_inc = _med_time(inc, reps=3)
+        t_full = _med_time(full, reps=3)
+        rows.append((f"refit_cells_{kind}_us", t_inc * 1e6,
+                     f"cells={r_chk.cells_changed}/{state.n_cells},"
+                     f"relabel={r_chk.n_relabeled},"
+                     f"speedup_vs_full={t_full / t_inc:.2f}x"))
+        rows.append((f"refit_full_{kind}_us", t_full * 1e6,
+                     f"queries={qs.shape[0]}"))
+        assert t_full / t_inc >= floor[kind], \
+            f"incremental refit must be ≥{floor[kind]}x cheaper at " \
+            f"≤25% cells changed, got {t_full / t_inc:.2f}x ({kind})"
+
+
+def refit_recovery_smoke(rows: list) -> None:
+    """``make bench-smoke`` gate for the online instance-optimization
+    loop: stream queries + localized inserts through a policy-driven
+    ``FreshServer`` and *assert* (a) the policy repacked mid-stream,
+    (b) the AI path came back within the refit-chunk drain budget after
+    the first repack — via incremental ``refit_cells`` alone (a full
+    ``fit_airtree`` on the serve path trips the planted raiser), and
+    (c) every segment served exactly against its visible points."""
+    from repro.core import build as buildlib, schedule
+    from repro.core import geometry as geo
+    from repro.core.monitor import DefaultPolicy, FreshServer
+
+    pts = synth.tweets_like(3000, seed=0)
+    tree = RTree(max_entries=32).insert_all(pts)
+    dtree = dt.flatten(tree)
+    qs = synth.synth_queries(pts, 1e-3, 150, seed=1)
+    lkw = {"max_results": 2048}
+    wl = labels.make_workload(dtree, qs, **lkw)
+    hyb, rep = buildlib.fit_airtree(dtree, wl, kind="knn", grid_sizes=(4,),
+                                    label_kwargs=lkw)
+    chunk = 4
+    srv = FreshServer(pts, hyb, delta_cap=256, max_visited=256,
+                      max_results=512, fit_state=rep.fit_state,
+                      policy=DefaultPolicy(refit_chunk=chunk,
+                                           repack_at=0.1))
+    stream = np.tile(qs, (4, 1))
+    rng = np.random.default_rng(5)
+    lo, hi = pts.min(axis=0), pts.max(axis=0)
+    ins = (lo + 0.02 * (hi - lo)
+           + np.abs(rng.normal(0, 0.004, (200, 2)))).astype(np.float32)
+
+    real_fit = buildlib.fit_airtree
+
+    def _raiser(*a, **k):
+        raise AssertionError("full fit_airtree ran on the serve path")
+
+    t0 = time.time()
+    buildlib.fit_airtree = _raiser
+    try:
+        mixed = schedule.serve_mixed_workload(
+            srv, stream, ins, batch=50, sort="hilbert", insert_every=1,
+            repack_every=0)
+    finally:
+        buildlib.fit_airtree = real_fit
+    dt_s = time.time() - t0
+
+    n_repacks = sum(d.repack for _, d in mixed.maintenance)
+    assert n_repacks >= 1, "gate must exercise a policy repack"
+    n_refit = sum(r.cells_refit for r in srv.refits)
+    assert n_refit > 0, "recovery must run through refit_cells chunks"
+    # recovery budget: with C cells stale and `chunk` per segment, the
+    # drain takes ceil(C / chunk) segments — the AI path must be back
+    # within that window after the first repack
+    first_rp = next(s for s, d in mixed.maintenance if d.repack)
+    budget = -(-rep.fit_state.n_cells // chunk)
+    u = np.asarray(mixed.stats.used_ai)
+    seg_ai = [u[b:e].mean() for b, e in mixed.seg_bounds]
+    window = seg_ai[first_rp + 1:first_rp + 1 + budget]
+    assert window and max(window) > 0.2, \
+        f"AI path did not recover within {budget} segments: {seg_ai}"
+    got = np.asarray(mixed.stats.n_results)
+    for (b, e), visible in schedule.visible_segments(mixed, pts):
+        exp = geo.np_contains_point(
+            stream[b:e][:, None, :], visible[None, :, :]).sum(axis=1)
+        np.testing.assert_array_equal(got[b:e], exp,
+                                      err_msg=f"segment {b}:{e}")
+    rows.append(("refit_recovery_smoke_us", dt_s * 1e6,
+                 f"repacks={n_repacks},refit_cells={n_refit},"
+                 f"recovered<= {budget}seg,oracle=exact"))
+
+
 def kernel_micro(rows: list) -> None:
     from repro.kernels import ops
     rng = np.random.default_rng(0)
@@ -614,6 +761,7 @@ def main(quick: bool = False) -> list:
     scale_bench(rows, quick=quick)
     freshness_bench(rows, n_points=10_000 if quick else 30_000,
                     n_ins=1024 if quick else 2048)
+    refit_bench(rows, quick=quick)
     if not quick:
         # the quick (CI fast-job) run skips this section: the same job
         # already runs it via the dedicated `make bench-smoke` gate
@@ -629,12 +777,16 @@ def smoke() -> list:
     the scheduler streaming loop (asserts sorted ≡ unsorted, so the
     serving loop cannot silently rot) and the mixed read/write freshness
     gate (asserts delta-serving ≡ the from-scratch rebuild oracle and
-    repack ≡ rebuild)."""
+    repack ≡ rebuild) and the online-refit recovery gate (asserts the
+    AI path recovers within ceil(C/chunk) segments after a policy
+    repack with full `fit_airtree` hard-disabled, results exact
+    throughout)."""
     rows: list = []
     # Q deliberately not a multiple of batch: the gate must exercise the
     # ragged tail's pad-and-drop path, not just full batches
     scheduler_bench(rows, Q=400, batch=128, L=2048, check=True)
     freshness_smoke(rows)
+    refit_recovery_smoke(rows)
     for name, val, extra in rows:
         print(f"{name},{val:.2f},{extra}")
     return rows

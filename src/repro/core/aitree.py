@@ -62,6 +62,41 @@ def bank_n_cells(bank) -> int:
     return bank.feat_idx.shape[0]
 
 
+def update_bank_cells(bank, cells, **rows):
+    """Functional per-cell-slot splice: return a new bank whose rows at
+    ``cells`` ([Csub] i32 global cell ids) are replaced by the given
+    ``[Csub, ...]`` arrays, all other cells' buffers untouched.
+
+    The write side of the cell-granular refit pipeline
+    (``build.refit_cells``): a sub-stack trained on just the changed
+    cells lands in the live bank with one scatter per buffer — no full
+    retrain, no bank reallocation. Field names must be per-cell buffers
+    of the bank family (leading axis C); globals like ``mu``/``sd`` are
+    rejected since splicing them would silently retarget *every* cell.
+    """
+    cells = jnp.asarray(cells, jnp.int32)
+    per_cell = {
+        MLPBank: ("w1", "b1", "w2", "b2", "label_map", "lmask"),
+        KNNBank: ("feats", "labels", "label_map", "lmask"),
+    }.get(type(bank))
+    if per_cell is None:
+        raise NotImplementedError(
+            f"update_bank_cells: {type(bank).__name__} has no per-cell "
+            "splice (forest banks refit whole)")
+    updates = {}
+    for name, val in rows.items():
+        if name not in per_cell:
+            raise ValueError(f"{name!r} is not a per-cell buffer of "
+                             f"{type(bank).__name__} (allowed: {per_cell})")
+        cur = getattr(bank, name)
+        val = jnp.asarray(val, cur.dtype)
+        if val.shape != (cells.shape[0],) + cur.shape[1:]:
+            raise ValueError(f"{name}: row shape {val.shape} does not match "
+                             f"({cells.shape[0]},) + {cur.shape[1:]}")
+        updates[name] = cur.at[cells].set(val)
+    return dataclasses.replace(bank, **updates)
+
+
 def make_aitree(grid: Grid, bank, *, max_cells: int = 4, max_pred: int = 64,
                 threshold: float = 0.5, cell_ok=None) -> AITree:
     kind = {MLPBank: "mlp", Forest: "forest", KNNBank: "knn"}[type(bank)]
@@ -141,7 +176,10 @@ def _refine_and_flag(ait: AITree, tree: DeviceTree, queries: jnp.ndarray,
     (empty prediction, mispredicted zero-count leaf, cell/prediction
     overflow, result truncation). One implementation so ``ai_query`` and
     ``ai_query_compact`` cannot drift apart on the fallback convention.
-    Returns ``(counts, n_pred_clamped, n_results, result_ids, fallback)``.
+    Returns ``(counts, n_pred_clamped, n_results, result_ids, fallback,
+    mispredict)`` — the misprediction signal rides along separately so the
+    maintenance policy can tell "model predicted a dead leaf" (drift
+    evidence against the query's cell) apart from the structural fallbacks.
     """
     pred_over = n_pred > ait.max_pred
     ref = traversal.refine_leaves(tree, queries, leaf_idx, valid,
@@ -153,7 +191,18 @@ def _refine_and_flag(ait: AITree, tree: DeviceTree, queries: jnp.ndarray,
     fallback = empty | mispredict | cell_over | pred_over | trunc
     n_results = jnp.sum(ref.counts * valid.astype(jnp.int32), axis=-1)
     return (ref.counts, jnp.minimum(n_pred, ait.max_pred), n_results,
-            result_ids, fallback)
+            result_ids, fallback, mispredict)
+
+
+def primary_cell_ids(ait: AITree, queries: jnp.ndarray) -> jnp.ndarray:
+    """[B] i32 — each query's anchor grid cell (its lower-left corner's
+    cell), or -1 for cell-window overflow. The per-query attribution key
+    the serving stats carry so the freshness monitor can aggregate guard/
+    mispredict/delta-hit evidence *per cell* and target maintenance
+    (refit/demote/promote) at cell granularity.
+    """
+    cell_ids, valid, _ = cells_of_queries(ait.grid, queries, ait.max_cells)
+    return jnp.where(valid[:, 0], cell_ids[:, 0], -1).astype(jnp.int32)
 
 
 class AIQueryResult(NamedTuple):
@@ -163,6 +212,9 @@ class AIQueryResult(NamedTuple):
     n_results: jnp.ndarray     # [B] qualifying points found
     result_ids: jnp.ndarray    # [B, max_results] i32, -1 pad
     fallback: jnp.ndarray      # [B] bool — run the exact R-path instead
+    mispredict: jnp.ndarray    # [B] bool — fallback specifically because a
+    #                            predicted leaf held no qualifying entry
+    cell_id: jnp.ndarray       # [B] i32 anchor cell (-1 on window overflow)
 
 
 @functools.partial(jax.jit, static_argnames=("max_results", "use_kernel"))
@@ -177,9 +229,9 @@ def ai_query(ait: AITree, tree: DeviceTree, queries: jnp.ndarray, *,
     # count that feeds n_pred / the empty and overflow fallback signals
     leaf_idx, valid, n_pred = traversal.compact_mask_counted(
         pred, ait.max_pred)
-    counts, n_pred_c, n_results, result_ids, fallback = _refine_and_flag(
-        ait, tree, queries, leaf_idx, valid, n_pred, cell_over,
-        max_results, use_kernel)
+    counts, n_pred_c, n_results, result_ids, fallback, mis = \
+        _refine_and_flag(ait, tree, queries, leaf_idx, valid, n_pred,
+                         cell_over, max_results, use_kernel)
     return AIQueryResult(
         pred_mask=pred,
         counts=counts,
@@ -187,6 +239,8 @@ def ai_query(ait: AITree, tree: DeviceTree, queries: jnp.ndarray, *,
         n_results=n_results,
         result_ids=result_ids,
         fallback=fallback,
+        mispredict=mis,
+        cell_id=primary_cell_ids(ait, queries),
     )
 
 
@@ -198,6 +252,9 @@ class AICompactResult(NamedTuple):
     n_results: jnp.ndarray     # [B] qualifying points found
     result_ids: jnp.ndarray    # [B, max_results] i32, -1 pad
     fallback: jnp.ndarray      # [B] bool — run the exact R-path instead
+    mispredict: jnp.ndarray    # [B] bool — fallback specifically because a
+    #                            predicted leaf held no qualifying entry
+    cell_id: jnp.ndarray       # [B] i32 anchor cell (-1 on window overflow)
 
 
 @functools.partial(jax.jit, static_argnames=("max_results", "use_kernel",
@@ -223,9 +280,9 @@ def ai_query_compact(ait: AITree, tree: DeviceTree, queries: jnp.ndarray, *,
     leaf_idx, valid, n_pred, cell_over = predict_compact(
         ait, queries, tree.n_leaves, use_kernel=use_kernel,
         tile_b=tile_b, tile_l=tile_l)
-    counts, n_pred_c, n_results, result_ids, fallback = _refine_and_flag(
-        ait, tree, queries, leaf_idx, valid, n_pred, cell_over,
-        max_results, use_kernel)
+    counts, n_pred_c, n_results, result_ids, fallback, mis = \
+        _refine_and_flag(ait, tree, queries, leaf_idx, valid, n_pred,
+                         cell_over, max_results, use_kernel)
     return AICompactResult(
         leaf_idx=leaf_idx,
         valid=valid,
@@ -234,4 +291,6 @@ def ai_query_compact(ait: AITree, tree: DeviceTree, queries: jnp.ndarray, *,
         n_results=n_results,
         result_ids=result_ids,
         fallback=fallback,
+        mispredict=mis,
+        cell_id=primary_cell_ids(ait, queries),
     )

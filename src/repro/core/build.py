@@ -6,6 +6,16 @@ Implements the paper's training protocol:
     models reach the best exact fit on the training workload;
   * train the binary router on an 80/20 split (§V-C2);
   * assemble the hybrid structure.
+
+The build is **cell-granular end to end**: bucketing, label-space
+construction, training (``mlp.train_cells`` / per-cell memorization) and
+certification (``cell_fit_flags``) are all per-cell computations with no
+cross-cell coupling. ``fit_airtree`` therefore emits a ``FitState``
+alongside the tree, and ``refit_cells`` replays the identical pipeline on
+just the cells whose leaf span changed (``core.spans``) — relabel →
+retrain → splice → re-certify — producing, by construction, bit-identical
+bank rows and fit flags to a from-scratch ``fit_airtree`` on the new tree
+(property-tested; the router is the one component refit leaves alone).
 """
 from __future__ import annotations
 
@@ -16,7 +26,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core import celldata, grid as gridlib, labels
-from repro.core.aitree import make_aitree
+from repro.core import spans as spanslib
+from repro.core.aitree import make_aitree, update_bank_cells
 from repro.core.classifiers import forest as forestlib
 from repro.core.classifiers import mlp as mlplib
 from repro.core.classifiers.router import train_router, RouterReport
@@ -41,6 +52,61 @@ class BuildReport:
     # guard sub-1.0-fit cells off the AI path (the under-prediction
     # blind-spot fix); the freshness monitor ANDs its staleness on top.
     cell_fit: Optional[np.ndarray] = None
+    # Everything ``refit_cells`` needs to continue this build incrementally
+    # (training rows, certificates, spans of the fitted tree, pinned pads).
+    fit_state: Optional["FitState"] = None
+
+
+@dataclasses.dataclass
+class FitState:
+    """The resumable state of a cell-granular build.
+
+    Host-side, append-free: ``refit_cells`` threads it functionally —
+    each call returns an updated copy whose certificates (``exact`` /
+    ``exact_valid``) and span snapshot describe the *current* tree, so
+    chunked refits (a few cells per serve segment) converge to exactly
+    the full-fit state regardless of chunk order.
+    """
+    queries: np.ndarray           # [Q, 4] f32 training queries (fixed)
+    true_rows: list               # [Q] np.int64 arrays — true leaf ids,
+    #                               kept current under remap/relabel
+    exact: np.ndarray             # [Q] bool — AI path answered exactly
+    exact_valid: np.ndarray       # [Q] bool — certificate is current;
+    #                               False while any touched cell is stale
+    cell_ids: np.ndarray          # [Q, S] i32 bucketing on the fit grid
+    cell_valid: np.ndarray        # [Q, S] bool
+    overflow: np.ndarray          # [Q] bool — cell-window overflow
+    qp: int                       # pinned query pad of the deployed bank
+    cl: int                       # pinned label pad of the deployed bank
+    spans: list                   # [C] frozensets — cell spans of the
+    sigs: list                    # [L] bytes    —  certified tree
+    cell_stale: np.ndarray        # [C] bool — span changed, not yet refit
+    kind: str
+    mlp_hidden: int
+    mlp_epochs: int
+    target_fit: float
+    seed: int
+    label_kwargs: dict            # make_workload kwargs for relabelling
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.spans)
+
+    def exact_fit(self) -> float:
+        """Aggregate certified exact fit (uncertified rows count as 0)."""
+        return float((self.exact & self.exact_valid).mean())
+
+
+@dataclasses.dataclass
+class RefitReport:
+    cells_changed: int        # span-diff invalidations seen this call
+    cells_refit: int          # cells actually retrained + respliced
+    cells_stale_left: int     # still-stale cells (chunked refit backlog)
+    n_relabeled: int          # queries re-run on the R path for labels
+    n_recertified: int        # queries whose exactness was re-evaluated
+    exact_fit: float          # aggregate certified fit after this call
+    train_epochs: int
+    train_seconds: float
 
 
 def _eval_exact_fit(ait, dtree: DeviceTree, wl: labels.Workload,
@@ -64,6 +130,30 @@ def _eval_exact_fit(ait, dtree: DeviceTree, wl: labels.Workload,
         tgt = wl.true_labels[o:o + take]
         exact[o:o + take] = ~fb & np.all(pred == tgt, axis=1)
     return float(exact.mean()), exact
+
+
+def _eval_exact_rows(ait, dtree: DeviceTree, queries: np.ndarray,
+                     true_rows: list, batch: int = 256) -> np.ndarray:
+    """Per-query exactness against index-form labels (refit-path twin of
+    ``_eval_exact_fit``; same ai_query → pred_mask comparison)."""
+    Q = queries.shape[0]
+    tgt = np.zeros((Q, dtree.n_leaves), bool)
+    for qi, rows in enumerate(true_rows):
+        tgt[qi, rows] = True
+    exact = np.zeros((Q,), bool)
+    import jax.numpy as jnp
+    from repro.core.aitree import ai_query
+    for o in range(0, Q, batch):
+        q = queries[o:o + batch]
+        pad = batch - q.shape[0]
+        if pad:
+            q = np.concatenate([q, np.tile(q[-1:], (pad, 1))])
+        res = ai_query(ait, dtree, jnp.asarray(q))
+        take = batch - pad
+        pred = np.asarray(res.pred_mask)[:take]
+        fb = np.asarray(res.fallback)[:take]
+        exact[o:o + take] = ~fb & np.all(pred == tgt[o:o + take], axis=1)
+    return exact
 
 
 def cell_fit_flags(grid, queries: np.ndarray, exact: np.ndarray,
@@ -104,15 +194,26 @@ def fit_airtree(dtree: DeviceTree, workload: labels.Workload, *,
                 target_fit: float = 1.0, mlp_hidden: int = 64,
                 mlp_epochs: int = 3000, forest_trees: int = 1,
                 forest_depth: int = 8, seed: int = 0,
+                max_labels: Optional[int] = None,
+                max_queries: Optional[int] = None,
                 router_workload: Optional[labels.Workload] = None,
+                label_kwargs: Optional[dict] = None,
                 verbose: bool = False) -> tuple[HybridTree, BuildReport]:
+    """Full build. ``max_labels``/``max_queries`` pin the per-cell pads
+    (default: tight to this workload) — a refit world and a from-scratch
+    world compare bit-identically only under equal pads.
+    ``label_kwargs`` records the ``make_workload`` settings the caller
+    labelled ``workload`` with, so ``refit_cells`` relabels identically.
+    """
     t0 = time.time()
-    best = None  # (fit, g, ait, bytes, cells)
+    best = None  # (fit, g, ait, bytes, cells, exact, ds)
     tried = []
     for g in grid_sizes:
         gr = gridlib.fit_grid(workload.queries, g)
         ds = celldata.build_cell_datasets(gr, workload,
-                                          max_cells_per_query=max_cells)
+                                          max_cells_per_query=max_cells,
+                                          max_labels=max_labels,
+                                          max_queries=max_queries)
         if kind == "mlp":
             bank, rep = mlplib.train_bank(
                 ds, hidden=mlp_hidden, max_epochs=mlp_epochs,
@@ -132,27 +233,195 @@ def fit_airtree(dtree: DeviceTree, workload: labels.Workload, *,
             print(f"  grid {g}x{g}: exact-fit {fit:.4f} "
                   f"({ds.n_cells_used} cells, {nbytes/1e6:.2f} MB)")
         if best is None or fit > best[0]:
-            best = (fit, g, ait, nbytes, ds.n_cells_used, exact)
+            best = (fit, g, ait, nbytes, ds.n_cells_used, exact, ds)
         if fit >= target_fit:
             break
-    fit, g, ait, nbytes, cells, exact = best
+    fit, g, ait, nbytes, cells, exact, ds = best
     # wire the winning grid's per-cell fit into the serving guard: cells
     # whose training queries were not all exact (or that saw no training
     # query) must not reach the ungated AI path — a sub-1.0 fit deployed
     # without this silently drops results (the under-prediction blind spot)
     import jax.numpy as jnp
     from repro.core.aitree import bank_n_cells
+    n_cells = bank_n_cells(ait.bank)
     cell_ok = cell_fit_flags(ait.grid, workload.queries, exact, max_cells,
-                             bank_n_cells(ait.bank))
+                             n_cells)
     ait = dataclasses.replace(ait, cell_ok=jnp.asarray(cell_ok))
 
     # §V-C2: the router is trained to GENERALIZE over the combined-α workload
     rwl = router_workload if router_workload is not None else workload
     router, rrep = train_router(rwl.queries, rwl.alpha, tau=tau, seed=seed)
     hybrid = HybridTree(tree=dtree, ait=ait, router=router)
+
+    ids, valid, overflow = gridlib.bucket_queries_by_cell(
+        ait.grid, workload.queries, max_cells)
+    sigs = spanslib.leaf_signatures(dtree)
+    state = FitState(
+        queries=np.asarray(workload.queries, np.float32).copy(),
+        true_rows=celldata.workload_true_rows(workload),
+        exact=exact.copy(),
+        exact_valid=np.ones_like(exact),
+        cell_ids=ids, cell_valid=valid, overflow=overflow,
+        qp=int(ds.feats.shape[1]), cl=int(ds.max_labels),
+        spans=spanslib.cell_spans(dtree, ait.grid, sigs=sigs),
+        sigs=sigs,
+        cell_stale=np.zeros((n_cells,), bool),
+        kind=kind, mlp_hidden=mlp_hidden, mlp_epochs=mlp_epochs,
+        target_fit=target_fit, seed=seed,
+        label_kwargs=dict(label_kwargs or {}))
     report = BuildReport(
         grid_sizes_tried=tried, grid_size=g, exact_fit=fit,
         classifier_kind=kind, cells_trained=cells, model_bytes=nbytes,
         router_bytes=router.byte_size(), router=rrep,
-        train_seconds=time.time() - t0, cell_fit=cell_ok)
+        train_seconds=time.time() - t0, cell_fit=cell_ok, fit_state=state)
     return hybrid, report
+
+
+def refit_cells(hybrid: HybridTree, state: FitState,
+                cells: Optional[np.ndarray] = None, *, batch: int = 256,
+                label_kwargs: Optional[dict] = None, verbose: bool = False
+                ) -> tuple[HybridTree, FitState, RefitReport]:
+    """Incrementally re-optimize the AI side against ``hybrid.tree``.
+
+    The online continuation of ``fit_airtree``: spans of the (possibly
+    repacked) tree are diffed against the certified snapshot in ``state``;
+    cells whose span moved are stale. This call relabels the stale-chunk
+    queries on the R path, retrains just the chunk's cells (same per-cell
+    pipeline, pinned pads), splices the rows into the live bank
+    (``update_bank_cells``), re-certifies every query whose touched cells
+    are all current again, and recomputes the serving guard. Bit-identical
+    to a from-scratch ``fit_airtree`` on the new tree for the retrained
+    cells — labels, bank rows, ``cell_ok`` — with the router deliberately
+    left as fit (it generalizes over α; drift there is the monitor's
+    demote/promote policy's business, not refit's).
+
+    ``cells`` defaults to *all* stale cells; pass a subset to spread the
+    work over serve segments (chunked refit) — certificates of queries
+    still touching a stale cell stay invalid and those cells stay guarded
+    until a later call retrains them. Cells in ``cells`` that are not
+    stale are retrained too (forced refit — the policy's promote lever).
+
+    Returns ``(hybrid', state', report)``; all inputs are left untouched
+    (functional update).
+    """
+    if state.kind not in ("mlp", "knn"):
+        raise NotImplementedError(
+            f"refit_cells: kind={state.kind!r} has no per-cell splice "
+            "(forest banks retrain whole via fit_airtree)")
+    t0 = time.time()
+    import jax.numpy as jnp
+    from repro.core.aitree import bank_n_cells
+
+    dtree = hybrid.tree
+    ait = hybrid.ait
+    bank = ait.bank
+    C = bank_n_cells(bank)
+    new_sigs = spanslib.leaf_signatures(dtree)
+    new_spans = spanslib.cell_spans(dtree, ait.grid, sigs=new_sigs)
+    changed, remap = spanslib.diff_spans(state.spans, new_spans,
+                                         state.sigs, new_sigs)
+    stale = state.cell_stale | changed
+    if cells is None:
+        cells = np.flatnonzero(stale)
+    cells = np.unique(np.asarray(cells, np.int64))
+    in_chunk = np.zeros((C,), bool)
+    in_chunk[cells] = True
+
+    ids, valid = state.cell_ids, state.cell_valid
+
+    def touch(cell_mask: np.ndarray) -> np.ndarray:
+        """[Q] bool — queries with a valid slot on any flagged cell."""
+        return (valid & cell_mask[ids]).any(axis=1)
+
+    # -- 1. carry surviving leaf ids across the tree change ----------------
+    exact = state.exact.copy()
+    exact_valid = state.exact_valid.copy()
+    true_rows = list(state.true_rows)
+    if state.sigs != new_sigs:
+        # rename global leaf ids everywhere they are stored: the bank's
+        # label maps (unchanged cells keep serving, exactly renamed) and
+        # the cached per-query label rows
+        lm, lmk = spanslib.remap_label_map(
+            np.asarray(bank.label_map), np.asarray(bank.lmask), remap)
+        bank = dataclasses.replace(bank, label_map=jnp.asarray(lm),
+                                   lmask=jnp.asarray(lmk))
+        for qi, rows in enumerate(true_rows):
+            if rows.size:
+                r = remap[rows]
+                if (r < 0).any():
+                    # a true leaf vanished ⇒ some touched cell's span
+                    # changed (dilation argument) ⇒ the query is relabeled
+                    # when that cell refits; until then: uncertified
+                    exact_valid[qi] = False
+                    r = r[r >= 0]
+                true_rows[qi] = np.sort(r).astype(np.int64)
+        exact_valid[touch(changed)] = False
+    # any query seeing a stale cell is uncertified until that cell refits
+    exact_valid[touch(stale)] = False
+
+    # -- 2. relabel the chunk's queries against the new tree ---------------
+    relabel = np.flatnonzero(touch(in_chunk))
+    if relabel.size:
+        lkw = dict(state.label_kwargs)
+        lkw.update(label_kwargs or {})
+        sub_wl = labels.make_workload(dtree, state.queries[relabel], **lkw)
+        for j, qi in enumerate(celldata.workload_true_rows(sub_wl)):
+            true_rows[int(relabel[j])] = qi
+
+    # -- 3. rebuild + retrain just the chunk, splice into the live bank ----
+    epochs = 0
+    if cells.size:
+        sub = celldata.build_cell_subset(
+            ait.grid, state.queries, true_rows, cells,
+            max_cells_per_query=ait.max_cells, max_labels=state.cl,
+            max_queries=state.qp)
+        if state.kind == "mlp":
+            mu, sd = mlplib.grid_norm(ait.grid)
+            params, trep = mlplib.train_cells(
+                sub.feats, sub.labels, sub.qmask, sub.lmask, mu, sd, cells,
+                hidden=state.mlp_hidden, max_epochs=state.mlp_epochs,
+                target_fit=state.target_fit, seed=state.seed)
+            epochs = trep.epochs
+            bank = update_bank_cells(
+                bank, cells, w1=params["w1"], b1=params["b1"],
+                w2=params["w2"], b2=params["b2"],
+                label_map=sub.label_map, lmask=sub.lmask)
+        else:
+            from repro.core.classifiers import knn as knnlib
+            sub_bank = knnlib.fit_knn(sub, eps=float(bank.eps))
+            bank = update_bank_cells(
+                bank, cells, feats=sub_bank.feats, labels=sub_bank.labels,
+                label_map=sub_bank.label_map, lmask=sub_bank.lmask)
+        if verbose:
+            print(f"  refit {cells.size} cells ({relabel.size} queries "
+                  f"relabeled, {epochs} epochs)")
+    post_stale = stale & ~in_chunk
+
+    # -- 4. re-certify queries whose world is current again ----------------
+    ait = dataclasses.replace(ait, bank=bank)
+    recert = np.flatnonzero(touch(in_chunk) & ~touch(post_stale))
+    if recert.size:
+        exact[recert] = _eval_exact_rows(
+            ait, dtree, state.queries[recert],
+            [true_rows[int(qi)] for qi in recert], batch=batch)
+        exact_valid[recert] = True
+
+    # -- 5. recompute the serving guard from the refreshed certificates ----
+    q_ok = exact & exact_valid
+    touched = np.zeros((C,), bool)
+    bad = np.zeros((C,), bool)
+    touched[ids[valid]] = True
+    bad[ids[valid & ~q_ok[:, None]]] = True
+    cell_ok = touched & ~bad & ~post_stale
+    ait = dataclasses.replace(ait, cell_ok=jnp.asarray(cell_ok))
+
+    state = dataclasses.replace(
+        state, true_rows=true_rows, exact=exact, exact_valid=exact_valid,
+        spans=new_spans, sigs=new_sigs, cell_stale=post_stale)
+    report = RefitReport(
+        cells_changed=int(changed.sum()), cells_refit=int(cells.size),
+        cells_stale_left=int(post_stale.sum()),
+        n_relabeled=int(relabel.size), n_recertified=int(recert.size),
+        exact_fit=state.exact_fit(), train_epochs=epochs,
+        train_seconds=time.time() - t0)
+    return dataclasses.replace(hybrid, ait=ait), state, report

@@ -112,31 +112,123 @@ def global_scores(bank: MLPBank, probs: jnp.ndarray, slot_valid: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# training (full-batch AdamW over the stacked experts; overfit on purpose)
+# training — cell-granular by construction (the online-refit contract)
+#
+# Every coupling between cells is removed so that training a *subset* of
+# cells reproduces, bit for bit, what training the full bank would have
+# given those cells (``build.refit_cells ≡ build.fit_airtree`` on the
+# retrained cells — property-tested):
+#   * init: each cell's weights come from its own fold-in rng stream
+#     ``default_rng((seed, cell_id, tensor))`` — independent of which
+#     other cells are in the batch;
+#   * normalizer: ``mu``/``sd`` derive from the grid geometry, not from
+#     the pooled workload features;
+#   * loss: per-cell mean summed over cells, so each cell's gradient is
+#     exactly what it would be trained alone (the old global-mask mean
+#     rescaled every cell's gradient by the other cells' mask counts);
+#   * early stop: per-cell freeze — a cell that reaches exact fit at a
+#     ``check_every`` boundary stops updating (params *and* Adam state
+#     held), so its final weights do not depend on how long the other
+#     cells keep training. Adam is elementwise, so per-cell trajectories
+#     are independent given the decoupled gradients.
 # ---------------------------------------------------------------------------
 
-def _bce(bank: MLPBank, feats, labels, qmask, lmask) -> jnp.ndarray:
-    logits = jnp.einsum("cqh,chl->cql", jnp.maximum(
-        jnp.einsum("cqf,cfh->cqh", (feats - bank.mu) / bank.sd, bank.w1)
-        + bank.b1[:, None, :], 0.0), bank.w2) + bank.b2[:, None, :]
-    # positive-class upweighting: multi-hot targets are sparse
-    z = jnp.clip(logits, -30, 30)
+def grid_norm(grid) -> tuple[np.ndarray, np.ndarray]:
+    """Feature normalizer derived from the grid bbox alone: rect corners
+    centered on the bbox center and scaled by its half-extents. Workload-
+    independent, so a cell's normalized features — and hence its whole
+    training trajectory — never change when other cells' queries do."""
+    b = np.asarray(grid.bbox, np.float32)
+    cx, cy = (b[0] + b[2]) / 2, (b[1] + b[3]) / 2
+    hx = max((b[2] - b[0]) / 2, 1e-6)
+    hy = max((b[3] - b[1]) / 2, 1e-6)
+    return (np.array([cx, cy, cx, cy], np.float32),
+            np.array([hx, hy, hx, hy], np.float32))
+
+
+def init_cell_params(cell_ids: np.ndarray, n_feats: int, hidden: int,
+                     n_labels: int, seed: int = 0) -> dict:
+    """Per-cell fold-in init: cell ``c``'s weights come from rng streams
+    keyed ``(seed, c, tensor)`` — identical whether ``c`` is initialized
+    alone or inside the full bank."""
+    w1, w2 = [], []
+    for c in np.asarray(cell_ids, np.int64):
+        r1 = np.random.default_rng((seed, int(c), 0))
+        r2 = np.random.default_rng((seed, int(c), 1))
+        w1.append(r1.normal(0, 1.0 / np.sqrt(n_feats),
+                            (n_feats, hidden)).astype(np.float32))
+        w2.append(r2.normal(0, 1.0 / np.sqrt(hidden),
+                            (hidden, n_labels)).astype(np.float32))
+    C = len(w1)
+    return {"w1": jnp.asarray(np.stack(w1)),
+            "b1": jnp.zeros((C, hidden), jnp.float32),
+            "w2": jnp.asarray(np.stack(w2)),
+            "b2": jnp.zeros((C, n_labels), jnp.float32)}
+
+
+def _cell_logits_p(params: dict, feats, mu, sd) -> jnp.ndarray:
+    x = (feats - mu) / sd
+    h = jnp.maximum(jnp.einsum("cqf,cfh->cqh", x, params["w1"])
+                    + params["b1"][:, None, :], 0.0)
+    return jnp.einsum("cqh,chl->cql", h, params["w2"]) \
+        + params["b2"][:, None, :]
+
+
+def _bce_cells(params: dict, feats, labels, qmask, lmask, live, mu, sd
+               ) -> jnp.ndarray:
+    """Decoupled loss: per-cell masked mean, summed over live cells."""
+    z = jnp.clip(_cell_logits_p(params, feats, mu, sd), -30, 30)
     ce = jnp.maximum(z, 0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    # positive-class upweighting: multi-hot targets are sparse
     w = jnp.where(labels > 0, 4.0, 1.0)
-    m = qmask[:, :, None] & lmask[:, None, :]
-    return jnp.sum(ce * w * m) / jnp.maximum(jnp.sum(m), 1)
+    m = (qmask[:, :, None] & lmask[:, None, :]).astype(jnp.float32)
+    per = jnp.sum(ce * w * m, axis=(1, 2)) \
+        / jnp.maximum(jnp.sum(m, axis=(1, 2)), 1.0)
+    return jnp.sum(per * live)
 
 
-def exact_fit_fraction(bank: MLPBank, feats, labels, qmask, lmask,
+def cell_fit_fractions(params: dict, feats, labels, qmask, lmask, mu, sd,
                        threshold: float = 0.5) -> jnp.ndarray:
-    """Fraction of (valid) training queries whose predicted set == true set."""
-    logits = jnp.einsum("cqh,chl->cql", jnp.maximum(
-        jnp.einsum("cqf,cfh->cqh", (feats - bank.mu) / bank.sd, bank.w1)
-        + bank.b1[:, None, :], 0.0), bank.w2) + bank.b2[:, None, :]
+    """[C] per-cell fraction of valid training queries whose predicted set
+    equals the true set. Cells with no valid query are vacuously 1.0."""
+    logits = _cell_logits_p(params, feats, mu, sd)
     pred = (jax.nn.sigmoid(logits) > threshold) & lmask[:, None, :]
-    tgt = labels > 0.5
-    ok = jnp.all(pred == tgt, axis=-1) | ~qmask
-    return jnp.sum(ok & qmask) / jnp.maximum(jnp.sum(qmask), 1)
+    ok = jnp.all(pred == (labels > 0.5), axis=-1) | ~qmask
+    n = jnp.sum(qmask, axis=1)
+    return jnp.where(n > 0,
+                     jnp.sum(ok & qmask, axis=1) / jnp.maximum(n, 1), 1.0)
+
+
+@jax.jit
+def _update_cells(params, opt_m, opt_v, t, live, feats, labels, qmask,
+                  lmask, mu, sd, lr, weight_decay):
+    loss, g = jax.value_and_grad(_bce_cells)(
+        params, feats, labels, qmask, lmask, live, mu, sd)
+    b1c, b2c = 0.9, 0.999
+    opt_m2 = jax.tree.map(lambda m_, g_: b1c * m_ + (1 - b1c) * g_,
+                          opt_m, g)
+    opt_v2 = jax.tree.map(lambda v_, g_: b2c * v_ + (1 - b2c) * g_ ** 2,
+                          opt_v, g)
+    mhat = jax.tree.map(lambda m_: m_ / (1 - b1c ** t), opt_m2)
+    vhat = jax.tree.map(lambda v_: v_ / (1 - b2c ** t), opt_v2)
+    new = jax.tree.map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + 1e-8)
+                                    + weight_decay * p),
+        params, mhat, vhat)
+
+    def keep_live(new_a, old_a):
+        lv = live.astype(bool).reshape((-1,) + (1,) * (new_a.ndim - 1))
+        return jnp.where(lv, new_a, old_a)
+
+    # frozen cells hold params AND optimizer state: their trajectory ended
+    # at their own freeze epoch, independent of the loop's total length
+    params = jax.tree.map(keep_live, new, params)
+    opt_m = jax.tree.map(keep_live, opt_m2, opt_m)
+    opt_v = jax.tree.map(keep_live, opt_v2, opt_v)
+    return params, opt_m, opt_v, loss
+
+
+_fit_cells_j = jax.jit(cell_fit_fractions)
 
 
 @dataclasses.dataclass
@@ -146,52 +238,87 @@ class TrainReport:
     exact_fit: float
 
 
-def train_bank(ds: CellDataset, *, hidden: int = 64, lr: float = 3e-3,
-               weight_decay: float = 0.0, max_epochs: int = 3000,
-               check_every: int = 200, target_fit: float = 1.0,
-               seed: int = 0) -> Tuple[MLPBank, TrainReport]:
-    bank = init_bank(ds, hidden=hidden, seed=seed)
-    feats = jnp.asarray(ds.feats)
-    labels = jnp.asarray(ds.labels)
-    qmask = jnp.asarray(ds.qmask)
-    lmask = jnp.asarray(ds.lmask)
+def train_cells(feats: np.ndarray, labels: np.ndarray, qmask: np.ndarray,
+                lmask: np.ndarray, mu: np.ndarray, sd: np.ndarray,
+                cell_ids: np.ndarray, *, hidden: int = 64, lr: float = 3e-3,
+                weight_decay: float = 0.0, max_epochs: int = 3000,
+                check_every: int = 200, target_fit: float = 1.0,
+                seed: int = 0) -> Tuple[dict, TrainReport]:
+    """Train a stack of per-cell experts over ``[C, Qp, ...]`` data rows.
 
-    params = {"w1": bank.w1, "b1": bank.b1, "w2": bank.w2, "b2": bank.b2}
+    ``cell_ids`` names each row's *global* cell id — the fold-in init key —
+    so a sub-stack of changed cells trains bit-identically to the same
+    cells inside the full bank (see the module docstring). Returns the
+    trained ``{w1, b1, w2, b2}`` rows and a ``TrainReport``.
+
+    ``target_fit < 1.0`` keeps the legacy aggregate early stop; note that
+    stopping before every cell froze makes the still-live cells' params
+    depend on the co-trained set, so the refit-equivalence guarantee only
+    holds at the default ``target_fit=1.0`` (where the stop condition —
+    every cell exactly fit — is itself per-cell).
+    """
+    Cl = labels.shape[-1]
+    params = init_cell_params(cell_ids, feats.shape[-1], hidden, Cl,
+                              seed=seed)
+    feats_j = jnp.asarray(feats, jnp.float32)
+    labels_j = jnp.asarray(labels, jnp.float32)
+    qmask_j = jnp.asarray(qmask)
+    lmask_j = jnp.asarray(lmask)
+    mu_j = jnp.asarray(mu, jnp.float32)
+    sd_j = jnp.asarray(sd, jnp.float32)
     opt_m = jax.tree.map(jnp.zeros_like, params)
     opt_v = jax.tree.map(jnp.zeros_like, params)
-
-    @jax.jit
-    def update(params, opt_m, opt_v, t):
-        def lf(p):
-            b = dataclasses.replace(bank, **p)
-            return _bce(b, feats, labels, qmask, lmask)
-        loss, g = jax.value_and_grad(lf)(params)
-        b1c, b2c = 0.9, 0.999
-        opt_m = jax.tree.map(lambda m_, g_: b1c * m_ + (1 - b1c) * g_, opt_m, g)
-        opt_v = jax.tree.map(lambda v_, g_: b2c * v_ + (1 - b2c) * g_ ** 2,
-                             opt_v, g)
-        mhat = jax.tree.map(lambda m_: m_ / (1 - b1c ** t), opt_m)
-        vhat = jax.tree.map(lambda v_: v_ / (1 - b2c ** t), opt_v)
-        params = jax.tree.map(
-            lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + 1e-8)
-                                        + weight_decay * p),
-            params, mhat, vhat)
-        return params, opt_m, opt_v, loss
-
-    @jax.jit
-    def fit_of(params):
-        b = dataclasses.replace(bank, **params)
-        return exact_fit_fraction(b, feats, labels, qmask, lmask)
+    live = jnp.ones((feats.shape[0],), jnp.float32)
 
     loss = np.inf
     fit = 0.0
     epoch = 0
     for epoch in range(1, max_epochs + 1):
-        params, opt_m, opt_v, loss = update(params, opt_m, opt_v, epoch)
+        params, opt_m, opt_v, loss = _update_cells(
+            params, opt_m, opt_v, jnp.float32(epoch), live, feats_j,
+            labels_j, qmask_j, lmask_j, mu_j, sd_j, jnp.float32(lr),
+            jnp.float32(weight_decay))
         if epoch % check_every == 0 or epoch == max_epochs:
-            fit = float(fit_of(params))
-            if fit >= target_fit:
+            fr = _fit_cells_j(params, feats_j, labels_j, qmask_j, lmask_j,
+                              mu_j, sd_j)
+            live = jnp.where(fr >= 1.0, 0.0, live)
+            nq = np.asarray(jnp.sum(qmask_j, axis=1))
+            frh = np.asarray(fr)
+            fit = float((frh * nq).sum() / max(nq.sum(), 1))
+            if not bool(np.any(np.asarray(live) > 0)) or fit >= target_fit:
                 break
-    bank = dataclasses.replace(bank, **params)
-    return bank, TrainReport(epochs=epoch, final_loss=float(loss),
-                             exact_fit=float(fit))
+    return params, TrainReport(epochs=epoch, final_loss=float(loss),
+                               exact_fit=float(fit))
+
+
+def train_bank(ds: CellDataset, *, hidden: int = 64, lr: float = 3e-3,
+               weight_decay: float = 0.0, max_epochs: int = 3000,
+               check_every: int = 200, target_fit: float = 1.0,
+               seed: int = 0) -> Tuple[MLPBank, TrainReport]:
+    """Full-bank fit: ``train_cells`` over every grid cell + assembly.
+
+    Kept as the one-shot entry point; the incremental path
+    (``build.refit_cells``) runs the identical per-cell pipeline on a
+    row subset and splices the results into the live bank."""
+    C = ds.feats.shape[0]
+    mu, sd = grid_norm(ds.grid)
+    params, rep = train_cells(
+        ds.feats, ds.labels, ds.qmask, ds.lmask, mu, sd,
+        np.arange(C, dtype=np.int64), hidden=hidden, lr=lr,
+        weight_decay=weight_decay, max_epochs=max_epochs,
+        check_every=check_every, target_fit=target_fit, seed=seed)
+    bank = MLPBank(
+        w1=params["w1"], b1=params["b1"], w2=params["w2"], b2=params["b2"],
+        mu=jnp.asarray(mu), sd=jnp.asarray(sd),
+        label_map=jnp.asarray(ds.label_map), lmask=jnp.asarray(ds.lmask))
+    return bank, rep
+
+
+def exact_fit_fraction(bank: MLPBank, feats, labels, qmask, lmask,
+                       threshold: float = 0.5) -> jnp.ndarray:
+    """Fraction of (valid) training queries whose predicted set == true set."""
+    params = {"w1": bank.w1, "b1": bank.b1, "w2": bank.w2, "b2": bank.b2}
+    fr = cell_fit_fractions(params, feats, labels, qmask, lmask, bank.mu,
+                            bank.sd, threshold)
+    n = jnp.sum(qmask, axis=1)
+    return jnp.sum(fr * n) / jnp.maximum(jnp.sum(n), 1)

@@ -186,6 +186,11 @@ class ServeStats(NamedTuple):
     delta_hits: jnp.ndarray     # [B] qualifying points found in the insert
     #                             delta buffer (already folded into
     #                             n_results; zeros when no delta store)
+    mispredict: jnp.ndarray     # [B] AI-path attempt hit the misprediction
+    #                             signal (predicted leaf, zero qualifiers) —
+    #                             per-cell drift evidence for the policy
+    cell_id: jnp.ndarray        # [B] i32 anchor grid cell (-1 on window
+    #                             overflow) — the monitor's aggregation key
 
 
 class RPathOut(NamedTuple):
@@ -203,6 +208,9 @@ class AIPathOut(NamedTuple):
     fallback: jnp.ndarray    # [B] prediction unusable → R answer
     guarded: jnp.ndarray     # [B] query overlaps a not-ok cell → demoted
     #                          to the R path before prediction
+    mispredict: jnp.ndarray  # [B] the misprediction component of fallback
+    #                          (a predicted leaf held no qualifying entry)
+    cell_id: jnp.ndarray     # [B] i32 anchor cell (-1 on window overflow)
 
 
 class SlotRefineOut(NamedTuple):
@@ -374,8 +382,12 @@ def _ai_path(h: HybridTree, queries: jnp.ndarray, cfg: EngineConfig,
     empty = n_pred == 0
     mis = ro.n_valid > ro.n_hit   # some predicted leaf had no qualifier
     fallback = empty | mis | cell_over | over
+    # anchor-cell attribution: global ids on replicated queries, identical
+    # on every shard (no collective needed)
+    cell_id = jnp.where(cvalid[:, 0], cell_ids[:, 0], -1).astype(jnp.int32)
     return AIPathOut(ai_counts=ro.n_results, n_pred=n_pred,
-                     fallback=fallback, guarded=guarded)
+                     fallback=fallback, guarded=guarded, mispredict=mis,
+                     cell_id=cell_id)
 
 
 def _delta_path(queries: jnp.ndarray, delta_xy: jnp.ndarray,
@@ -427,7 +439,10 @@ def _route_combine(h: HybridTree, queries: jnp.ndarray, rp: RPathOut,
     return ServeStats(n_results=n_results, leaf_accesses=leaf_accesses,
                       routed_high=high, used_ai=used_ai,
                       r_truncated=rp.r_truncated & ~used_ai,
-                      guarded=demoted, delta_hits=d_hits)
+                      guarded=demoted, delta_hits=d_hits,
+                      # only rows that attempted the AI path can mispredict
+                      mispredict=eligible & ap.mispredict,
+                      cell_id=ap.cell_id)
 
 
 def make_serve_step(mesh, cfg: EngineConfig, *, kind: str,
@@ -464,7 +479,8 @@ def make_serve_step(mesh, cfg: EngineConfig, *, kind: str,
     ospec = ServeStats(n_results=P(baxes), leaf_accesses=P(baxes),
                        routed_high=P(baxes), used_ai=P(baxes),
                        r_truncated=P(baxes), guarded=P(baxes),
-                       delta_hits=P(baxes))
+                       delta_hits=P(baxes), mispredict=P(baxes),
+                       cell_id=P(baxes))
 
     def serve_step(h: HybridTree, queries: jnp.ndarray,
                    delta_xy: Optional[jnp.ndarray] = None) -> ServeStats:

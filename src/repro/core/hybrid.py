@@ -45,6 +45,13 @@ class HybridResult(NamedTuple):
     guarded: jnp.ndarray        # [B] routed-high but demoted to the R path
     #                             by the cell guard (fit < 1 or stale cell —
     #                             mirrors ServeStats.guarded)
+    mispredict: jnp.ndarray     # [B] AI-path attempt hit the paper's
+    #                             misprediction signal (a predicted leaf
+    #                             with zero qualifying entries) — per-cell
+    #                             drift evidence for the maintenance policy
+    cell_id: jnp.ndarray        # [B] i32 anchor grid cell of the query
+    #                             (-1 on cell-window overflow) — the key
+    #                             the monitor aggregates signals under
 
 
 def guard_demoted(ait: AITree, queries: jnp.ndarray) -> jnp.ndarray:
@@ -124,4 +131,8 @@ def hybrid_query(h: HybridTree, queries: jnp.ndarray, *,
         # (AI-side truncation already forces fallback)
         truncated=r.truncated & ~used_ai,
         guarded=demoted,
+        # only rows that actually attempted the AI path can mispredict —
+        # drift evidence must not be charged to guarded/low-overlap rows
+        mispredict=eligible & ai.mispredict,
+        cell_id=ai.cell_id,
     )

@@ -14,19 +14,34 @@ router-side guard consults (``AITree.cell_ok``): stale or ``fit < 1``
 cells are demoted to the exact R path, which closes the under-prediction
 blind spot for drifted *and* under-trained banks in one mechanism.
 
+Beyond the guard inputs, the monitor is the serving side's **policy
+engine**: every served batch feeds per-cell rolling counters (traffic,
+guard rate, mispredict rate, delta-hit rate — aggregated per serve
+segment, summarized by the rolling median over a window of segments),
+and a pluggable ``MaintenancePolicy`` turns those signals into
+between-segment maintenance decisions — which stale cells to refit
+next (``build.refit_cells`` chunks), when to repack the delta buffer,
+and which cells to force-demote off / promote back onto the AI path.
+
 ``FreshServer`` owns the whole live state — hybrid tree, delta store,
 monitor — and is what the scheduler drives for a mixed read/write
 stream: ``serve``/``serve_wide`` answer batches (tree paths + delta
 probe, merged), ``insert`` stages points and bumps staleness, ``repack``
-swaps in a fresh bulk-loaded tree between batches. After a repack the
-*entire* bank is marked stale: ``str_bulk`` renumbers every leaf, so the
-bank's label space refers to a tree that no longer exists — the guard
-demoting everything to the R path is exactly what keeps serving correct
-until a refit (``refit`` recomputes labels + fit flags on the new tree).
+swaps in a fresh bulk-loaded tree between batches. Without a
+``FitState`` the legacy contract holds: after a repack the *entire*
+bank is marked stale (``str_bulk`` renumbers every leaf, so the bank's
+label space refers to a tree that no longer exists) and stays guarded
+until a full refit. With a ``FitState`` (``BuildReport.fit_state``)
+the repack instead runs a span-diff (``core.spans``): surviving leaf
+ids are renamed inside the bank, only cells whose leaf span actually
+moved go stale, and the policy retrains them incrementally through
+``refit_cells`` — the AI path recovers cell by cell with no full
+``fit_airtree`` on the serve path.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Callable, NamedTuple, Optional
 
 import numpy as np
@@ -55,6 +70,8 @@ class FreshResult(NamedTuple):
     n_true: "jax.Array"
     truncated: "jax.Array"
     guarded: "jax.Array"
+    mispredict: "jax.Array"
+    cell_id: "jax.Array"
     delta_hits: "jax.Array"     # [B] buffer hits (already in n_results)
 
 
@@ -71,19 +88,104 @@ class FreshnessStats(NamedTuple):
     n_inserts: int       # staged since the monitor was (re)fit
     n_repacks: int
     delta_fill: int      # points currently staged in the buffer
+    span_stale_cells: int = 0   # cells awaiting an incremental refit
+    demoted_cells: int = 0      # cells force-demoted by the policy
+
+
+# the per-cell serve counters one segment accumulates before the window
+# rolls — the monitor's unit of rolling-rate aggregation
+_SERVE_FIELDS = ("n", "guarded", "mispredict", "used_ai", "delta_hits")
 
 
 class FreshnessMonitor:
-    """Host-side per-cell fit/staleness tracking over the model grid."""
+    """Host-side per-cell fit/staleness tracking over the model grid,
+    plus the rolling serve-signal counters the maintenance policy reads.
 
-    def __init__(self, grid: Grid, fit_ok: np.ndarray):
+    Guard state (ANDed into ``cell_ok``):
+
+    * ``fit_ok`` — certificate flags from the last (re)fit;
+    * ``stale`` — insert counters (points staged since the fit — only a
+      repack can absorb them into the tree);
+    * ``span_stale`` — cells whose leaf span moved under a repack and
+      that no refit chunk has retrained yet (span-diff invalidation);
+    * ``forced_demote`` — policy demotions (drift evidence the span
+      diff cannot see, e.g. a workload shift inside an unchanged span).
+
+    Serve signals: ``note_serve`` accumulates per-cell counters for the
+    current segment; ``roll_segment`` closes it into a bounded window,
+    and ``rolling``/``traffic`` summarize the window with the rolling
+    *median* (robust to one-segment spikes — a single anomalous batch
+    cannot trigger a demotion cascade).
+    """
+
+    def __init__(self, grid: Grid, fit_ok: np.ndarray, *, window: int = 8):
         self._grid = grid
         self.fit_ok = np.asarray(fit_ok, bool).copy()
         assert self.fit_ok.shape == (grid.n_cells,), \
             (self.fit_ok.shape, grid.g)
         self.stale = np.zeros_like(self.fit_ok, dtype=np.int64)
+        self.span_stale = np.zeros_like(self.fit_ok, dtype=bool)
+        self.forced_demote = np.zeros_like(self.fit_ok, dtype=bool)
+        self.demoted_at = np.zeros_like(self.fit_ok, dtype=np.int64)
         self.n_inserts = 0
         self.n_repacks = 0
+        self.seg_counter = 0
+        self._window = deque(maxlen=int(window))
+        self._reset_segment()
+
+    # -- serve-signal accumulation ----------------------------------------
+
+    def _reset_segment(self) -> None:
+        C = self.fit_ok.shape[0]
+        self._seg = {f: np.zeros((C,), np.int64) for f in _SERVE_FIELDS}
+
+    def note_serve(self, stats) -> None:
+        """Accumulate one served batch's per-query signals per cell.
+
+        ``stats`` is any pytree with ``cell_id``/``guarded``/
+        ``mispredict``/``used_ai``/``delta_hits`` fields ([B] arrays —
+        ``FreshResult`` and ``engine.ServeStats`` both qualify). Rows
+        with ``cell_id < 0`` (cell-window overflow) have no anchor cell
+        and are dropped; scheduler pad rows are counted (they repeat a
+        real query, so they only re-weight that query's own cell).
+        """
+        cid = np.asarray(stats.cell_id).ravel().astype(np.int64)
+        keep = cid >= 0
+        cid = cid[keep]
+        np.add.at(self._seg["n"], cid, 1)
+        for f in _SERVE_FIELDS[1:]:
+            v = np.asarray(getattr(stats, f)).ravel()[keep]
+            np.add.at(self._seg[f], cid, v.astype(np.int64))
+
+    def roll_segment(self) -> None:
+        """Close the current segment into the rolling window."""
+        self._window.append(self._seg)
+        self.seg_counter += 1
+        self._reset_segment()
+
+    def rolling(self, field: str) -> np.ndarray:
+        """[C] f64 rolling-median per-cell *rate* of ``field`` over the
+        window (count / queries, per segment; segments where a cell saw
+        no traffic don't vote — all-quiet cells rate 0)."""
+        if field not in _SERVE_FIELDS[1:]:
+            raise ValueError(f"unknown serve field {field!r}")
+        if not self._window:
+            return np.zeros((self.fit_ok.shape[0],), np.float64)
+        n = np.stack([s["n"] for s in self._window]).astype(np.float64)
+        v = np.stack([s[field] for s in self._window]).astype(np.float64)
+        rates = np.where(n > 0, v / np.maximum(n, 1), np.nan)
+        voters = (n > 0).any(axis=0)
+        med = np.zeros((self.fit_ok.shape[0],), np.float64)
+        if voters.any():
+            med[voters] = np.nanmedian(rates[:, voters], axis=0)
+        return med
+
+    def traffic(self) -> np.ndarray:
+        """[C] f64 rolling-median per-cell queries per segment."""
+        if not self._window:
+            return np.zeros((self.fit_ok.shape[0],), np.float64)
+        n = np.stack([s["n"] for s in self._window]).astype(np.float64)
+        return np.median(n, axis=0)
 
     def _cells_of_points(self, points: np.ndarray) -> np.ndarray:
         # map points as degenerate rects through the grid's own
@@ -102,12 +204,47 @@ class FreshnessMonitor:
         np.add.at(self.stale, cells, 1)
         self.n_inserts += int(cells.shape[0])
 
-    def note_repack(self) -> None:
-        """The tree was rebuilt: every cell's label space is now wrong
-        (bulk load renumbers all leaves), so the whole bank goes stale
-        until a refit."""
-        self.stale[:] = max(1, int(self.stale.max()))
+    def note_repack(self, changed: Optional[np.ndarray] = None) -> None:
+        """The tree was rebuilt. Legacy contract (``changed=None``):
+        every cell goes stale — bulk load renumbers all leaves, so the
+        whole bank's label space refers to a tree that no longer
+        exists. Span-diff contract (``changed`` = [C] bool from
+        ``build.refit_cells``'s diff): surviving leaves were renamed
+        inside the bank, so *only* cells whose leaf span moved are
+        stale; the insert counters reset (every staged point is in the
+        tree now, and a repack-received cell's span provably changed —
+        the receiving leaf intersects that cell — so no insert evidence
+        is lost by the fold)."""
+        if changed is None:
+            self.stale[:] = max(1, int(self.stale.max()))
+        else:
+            self.stale[:] = 0
+            self.span_stale = np.asarray(changed, bool).copy()
         self.n_repacks += 1
+
+    def note_refit_cells(self, cell_ok: np.ndarray,
+                         still_stale: np.ndarray) -> None:
+        """An incremental ``build.refit_cells`` chunk landed: replace
+        the certificate flags wholesale (re-certification can flip
+        cells *outside* the chunk — a shared query's verdict changed)
+        and narrow ``span_stale`` to the cells the chunk left behind.
+        Insert counters are untouched: a refit trains on the tree, not
+        the buffer, so points staged since the last repack still guard
+        their cells."""
+        self.fit_ok = np.asarray(cell_ok, bool).copy()
+        self.span_stale = np.asarray(still_stale, bool).copy()
+
+    # -- policy levers ------------------------------------------------------
+
+    def force_demote(self, cells: np.ndarray) -> None:
+        """Policy demotion: hold ``cells`` off the AI path regardless of
+        their certificates (drift evidence the span diff cannot see)."""
+        cells = np.asarray(cells, np.int64)
+        self.forced_demote[cells] = True
+        self.demoted_at[cells] = self.seg_counter
+
+    def clear_demote(self, cells: np.ndarray) -> None:
+        self.forced_demote[np.asarray(cells, np.int64)] = False
 
     def note_refit(self, fit_ok: np.ndarray,
                    grid: Optional[Grid] = None) -> None:
@@ -122,11 +259,19 @@ class FreshnessMonitor:
         assert self.fit_ok.shape == (self._grid.n_cells,), \
             (self.fit_ok.shape, self._grid.g)
         self.stale = np.zeros_like(self.fit_ok, dtype=np.int64)
+        self.span_stale = np.zeros_like(self.fit_ok, dtype=bool)
+        self.forced_demote = np.zeros_like(self.fit_ok, dtype=bool)
+        self.demoted_at = np.zeros_like(self.fit_ok, dtype=np.int64)
         self.n_inserts = 0
+        if self.fit_ok.shape[0] != self._seg["n"].shape[0]:
+            self._window.clear()
+            self._reset_segment()
 
     def cell_ok(self) -> np.ndarray:
-        """[C] bool: serve-eligible = exact fit AND no inserts since."""
-        return self.fit_ok & (self.stale == 0)
+        """[C] bool: serve-eligible = certified fit AND no inserts since
+        AND span current AND not policy-demoted."""
+        return self.fit_ok & (self.stale == 0) & ~self.span_stale \
+            & ~self.forced_demote
 
     def guard_array(self) -> jnp.ndarray:
         return jnp.asarray(self.cell_ok())
@@ -135,9 +280,78 @@ class FreshnessMonitor:
         ok = self.cell_ok()
         return FreshnessStats(
             n_cells=int(ok.size), fit_cells=int(self.fit_ok.sum()),
-            stale_cells=int((self.stale > 0).sum()), ok_cells=int(ok.sum()),
+            stale_cells=int(((self.stale > 0) | self.span_stale).sum()),
+            ok_cells=int(ok.sum()),
             n_inserts=self.n_inserts, n_repacks=self.n_repacks,
-            delta_fill=delta_fill)
+            delta_fill=delta_fill,
+            span_stale_cells=int(self.span_stale.sum()),
+            demoted_cells=int(self.forced_demote.sum()))
+
+
+class MaintenanceDecision(NamedTuple):
+    """One between-segments verdict from a ``MaintenancePolicy``."""
+    repack: bool             # merge the delta buffer into a fresh tree
+    refit: np.ndarray        # i64 cells to retrain this segment (chunk)
+    demote: np.ndarray       # i64 cells to force off the AI path
+    promote: np.ndarray      # i64 demoted cells to retrain + readmit
+
+
+class MaintenancePolicy:
+    """Strategy interface: rolling per-cell signals → maintenance."""
+
+    def decide(self, monitor: FreshnessMonitor, *, delta_fill: int,
+               delta_capacity: int) -> MaintenanceDecision:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class DefaultPolicy(MaintenancePolicy):
+    """Stats-driven maintenance defaults.
+
+    * **repack** when the delta buffer passes ``repack_at`` of its
+      capacity (ahead of the forced repack-before-overflow, so the
+      span diff + chunked refits amortize across quiet segments);
+    * **refit** up to ``refit_chunk`` span-stale cells per segment,
+      hottest first (rolling-median traffic) — recovery effort follows
+      the workload, so the cells that cost the most guarded R-path
+      serves come back to the AI path first;
+    * **demote** serve-eligible cells whose rolling mispredict rate
+      exceeds ``demote_mispredict`` (with at least ``min_traffic``
+      queries/segment of evidence) — drift *inside* an unchanged span
+      that certificates can't see;
+    * **promote** demoted cells after ``promote_after`` segments by
+      scheduling a forced refit (retrain + recertify readmits them
+      only if the new certificates hold; ``0`` disables).
+    """
+    refit_chunk: int = 4
+    repack_at: float = 0.75
+    demote_mispredict: float = 0.25
+    min_traffic: float = 4.0
+    promote_after: int = 2
+
+    def decide(self, monitor: FreshnessMonitor, *, delta_fill: int,
+               delta_capacity: int) -> MaintenanceDecision:
+        repack = bool(delta_capacity > 0 and delta_fill
+                      >= self.repack_at * delta_capacity)
+        traffic = monitor.traffic()
+        stale = np.flatnonzero(monitor.span_stale)
+        if self.refit_chunk and stale.size > self.refit_chunk:
+            hot = np.argsort(-traffic[stale], kind="stable")
+            stale = np.sort(stale[hot[:self.refit_chunk]])
+        mis = monitor.rolling("mispredict")
+        demote = np.flatnonzero(
+            monitor.cell_ok() & (traffic >= self.min_traffic)
+            & (mis > self.demote_mispredict))
+        if self.promote_after:
+            age = monitor.seg_counter - monitor.demoted_at
+            promote = np.flatnonzero(monitor.forced_demote
+                                     & (age >= self.promote_after))
+        else:
+            promote = np.zeros((0,), np.int64)
+        return MaintenanceDecision(
+            repack=repack, refit=stale.astype(np.int64),
+            demote=demote.astype(np.int64),
+            promote=promote.astype(np.int64))
 
 
 class FreshServer:
@@ -160,7 +374,9 @@ class FreshServer:
                  max_results: int = 512, delta_k: int = 64,
                  wide_factor: int = 8, use_kernel: bool = False,
                  guard: bool = True,
-                 refit_fn: Optional[Callable] = None):
+                 refit_fn: Optional[Callable] = None,
+                 fit_state=None,
+                 policy: Optional[MaintenancePolicy] = None):
         self.points = np.asarray(points, np.float64)
         self.max_entries = hybrid.tree.max_entries
         self.monitor = FreshnessMonitor(hybrid.ait.grid,
@@ -175,6 +391,13 @@ class FreshServer:
         # a relabel + build.fit_airtree closure; None keeps the stale bank
         # guarded (R-path serving) after repacks
         self._refit_fn = refit_fn
+        # fit_state: the build.FitState snapshot from BuildReport — turns
+        # repacks into span-diffs and unlocks incremental refit_cells;
+        # policy: between-segment maintenance (None = manual only)
+        self.fit_state = fit_state
+        self.policy = policy
+        self.maintenance = []   # (segment, MaintenanceDecision) log
+        self.refits = []        # build.RefitReport log
         self._sync_guard()
 
     # -- serving -----------------------------------------------------------
@@ -190,7 +413,12 @@ class FreshServer:
         return FreshResult(*merged, delta_hits=hits.count)
 
     def serve(self, q) -> "jax.Array":
-        return self._serve(jnp.asarray(q), 1)
+        res = self._serve(jnp.asarray(q), 1)
+        # narrow tier sees every query exactly once (the wide tier only
+        # re-serves truncated rows) — the one place signal feeding stays
+        # double-count-free
+        self.monitor.note_serve(res)
+        return res
 
     def serve_wide(self, q) -> "jax.Array":
         return self._serve(jnp.asarray(q), self._wf)
@@ -221,13 +449,30 @@ class FreshServer:
 
     def repack(self) -> None:
         """Online repack: swap in a fresh bulk-loaded tree holding every
-        staged point, empty the buffer, and (without a refit) guard the
-        whole bank — its labels refer to the old tree's leaf ids."""
+        staged point and empty the buffer. With a ``fit_state`` the swap
+        runs an *empty-chunk* ``build.refit_cells`` — span diff, leaf-id
+        renames inside the live bank, certificate invalidation — so only
+        span-changed cells go stale (unchanged cells keep serving the AI
+        path through the repack); retraining is left to later chunks.
+        Without one, the legacy contract: guard the whole bank until
+        ``refit_fn`` (or a manual full refit) lands."""
         _, dtree, allp, self.delta = deltalib.repack(
             self.points, self.delta, max_entries=self.max_entries)
         self.points = allp
-        self.monitor.note_repack()
-        if self._refit_fn is not None:
+        if self.fit_state is not None:
+            from repro.core import build as buildlib
+            self.hybrid = dataclasses.replace(self.hybrid, tree=dtree)
+            self.hybrid, self.fit_state, rep = buildlib.refit_cells(
+                self.hybrid, self.fit_state,
+                cells=np.zeros((0,), np.int64))
+            self.refits.append(rep)
+            self.monitor.note_repack(
+                changed=self.fit_state.cell_stale.copy())
+            self.monitor.note_refit_cells(
+                np.asarray(self.hybrid.ait.cell_ok),
+                self.fit_state.cell_stale.copy())
+        elif self._refit_fn is not None:
+            self.monitor.note_repack()
             hybrid, cell_fit = self._refit_fn(dtree)
             self.hybrid = hybrid
             # the refit's grid search may land on a different grid size —
@@ -235,8 +480,54 @@ class FreshServer:
             self.monitor.note_refit(np.asarray(cell_fit, bool),
                                     grid=hybrid.ait.grid)
         else:
+            self.monitor.note_repack()
             self.hybrid = dataclasses.replace(self.hybrid, tree=dtree)
         self._sync_guard()
+
+    # -- incremental maintenance -------------------------------------------
+
+    def refit_cells(self, cells: Optional[np.ndarray] = None):
+        """Retrain a chunk of stale cells in place (requires
+        ``fit_state``); ``None`` = all currently stale. Returns the
+        ``build.RefitReport``."""
+        if self.fit_state is None:
+            raise ValueError("refit_cells needs a FitState "
+                             "(build with fit_airtree and pass "
+                             "BuildReport.fit_state)")
+        from repro.core import build as buildlib
+        self.hybrid, self.fit_state, rep = buildlib.refit_cells(
+            self.hybrid, self.fit_state, cells)
+        self.refits.append(rep)
+        self.monitor.note_refit_cells(np.asarray(self.hybrid.ait.cell_ok),
+                                      self.fit_state.cell_stale.copy())
+        self._sync_guard()
+        return rep
+
+    def on_segment(self) -> Optional[MaintenanceDecision]:
+        """Between-segments hook the scheduler calls after each serve
+        segment: roll the signal window, ask the policy, apply the
+        decision (repack / demote / promote / refit chunk)."""
+        self.monitor.roll_segment()
+        if self.policy is None:
+            return None
+        d = self.policy.decide(self.monitor, delta_fill=self.delta.n,
+                               delta_capacity=self.delta.capacity)
+        if d.repack:
+            self.repack()
+        if d.demote.size:
+            self.monitor.force_demote(d.demote)
+        if d.promote.size:
+            self.monitor.clear_demote(d.promote)
+        cells = np.union1d(d.refit, d.promote).astype(np.int64)
+        if cells.size and self.fit_state is not None:
+            # a repack above may have widened the stale set; the chunk
+            # is still sound — refit_cells re-diffs and retrains exactly
+            # these cells against the new tree
+            self.refit_cells(cells)
+        else:
+            self._sync_guard()
+        self.maintenance.append((self.monitor.seg_counter, d))
+        return d
 
     def stats(self) -> FreshnessStats:
         return self.monitor.stats(delta_fill=self.delta.n)
@@ -255,7 +546,8 @@ class EngineFreshServer:
 
     def __init__(self, points: np.ndarray, hybrid: HybridTree, mesh, cfg, *,
                  kind: str, n_model: int, delta_cap: int = 4096,
-                 wide_factor: int = 8):
+                 wide_factor: int = 8, fit_state=None,
+                 policy: Optional[MaintenancePolicy] = None):
         from repro.core import engine as eng
         self.points = np.asarray(points, np.float64)
         self.max_entries = hybrid.tree.max_entries
@@ -265,6 +557,10 @@ class EngineFreshServer:
                                          base=self.points.shape[0])
         self.hybrid = hybrid
         self._n_model = int(n_model)
+        self.fit_state = fit_state
+        self.policy = policy
+        self.maintenance = []
+        self.refits = []
         narrow, wide = eng.make_two_tier_steps(
             mesh, cfg, kind=kind, wide_factor=wide_factor)
         self._jnarrow = jax.jit(narrow)
@@ -296,7 +592,9 @@ class EngineFreshServer:
             self._h_p, ait=dataclasses.replace(self._h_p.ait, cell_ok=ok_p))
 
     def serve(self, q) -> "jax.Array":
-        return self._jnarrow(self._h_p, jnp.asarray(q), self.delta.xy)
+        out = self._jnarrow(self._h_p, jnp.asarray(q), self.delta.xy)
+        self.monitor.note_serve(out)   # narrow tier only — see FreshServer
+        return out
 
     def serve_wide(self, q) -> "jax.Array":
         return self._jwide(self._h_p, jnp.asarray(q), self.delta.xy)
@@ -317,9 +615,62 @@ class EngineFreshServer:
         _, dtree, allp, self.delta = deltalib.repack(
             self.points, self.delta, max_entries=self.max_entries)
         self.points = allp
-        self.monitor.note_repack()
         self.hybrid = dataclasses.replace(self.hybrid, tree=dtree)
+        if self.fit_state is not None:
+            # span-diff swap, as FreshServer.repack: renames survive in
+            # the bank, only span-changed cells go stale
+            from repro.core import build as buildlib
+            self.hybrid, self.fit_state, rep = buildlib.refit_cells(
+                self.hybrid, self.fit_state,
+                cells=np.zeros((0,), np.int64))
+            self.refits.append(rep)
+            self.monitor.note_repack(
+                changed=self.fit_state.cell_stale.copy())
+            self.monitor.note_refit_cells(
+                np.asarray(self.hybrid.ait.cell_ok),
+                self.fit_state.cell_stale.copy())
+        else:
+            self.monitor.note_repack()
         self._repad()
+
+    def refit_cells(self, cells: Optional[np.ndarray] = None):
+        """Incremental chunk refit (requires ``fit_state``) + mesh
+        re-pad — the spliced bank rows must land in the padded copy the
+        jit'd steps actually serve from."""
+        if self.fit_state is None:
+            raise ValueError("refit_cells needs a FitState "
+                             "(build with fit_airtree and pass "
+                             "BuildReport.fit_state)")
+        from repro.core import build as buildlib
+        self.hybrid, self.fit_state, rep = buildlib.refit_cells(
+            self.hybrid, self.fit_state, cells)
+        self.refits.append(rep)
+        self.monitor.note_refit_cells(np.asarray(self.hybrid.ait.cell_ok),
+                                      self.fit_state.cell_stale.copy())
+        self._repad()
+        return rep
+
+    def on_segment(self) -> Optional[MaintenanceDecision]:
+        """Between-segments maintenance hook — same contract as
+        ``FreshServer.on_segment``."""
+        self.monitor.roll_segment()
+        if self.policy is None:
+            return None
+        d = self.policy.decide(self.monitor, delta_fill=self.delta.n,
+                               delta_capacity=self.delta.capacity)
+        if d.repack:
+            self.repack()
+        if d.demote.size:
+            self.monitor.force_demote(d.demote)
+        if d.promote.size:
+            self.monitor.clear_demote(d.promote)
+        cells = np.union1d(d.refit, d.promote).astype(np.int64)
+        if cells.size and self.fit_state is not None:
+            self.refit_cells(cells)
+        else:
+            self._sync_guard()
+        self.maintenance.append((self.monitor.seg_counter, d))
+        return d
 
     def stats(self) -> FreshnessStats:
         return self.monitor.stats(delta_fill=self.delta.n)

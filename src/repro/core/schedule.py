@@ -216,6 +216,8 @@ class MixedReport(NamedTuple):
     n_reserved: int         # rows re-served on the wide tier
     n_inserts: int          # points staged into the delta store
     n_repacks: int          # online repacks performed mid-stream
+    #                         (scheduler-initiated via repack_every;
+    #                         policy repacks live in ``maintenance``)
     n_segments: int         # insert-delimited spans of the query stream
     seg_bounds: tuple       # per-segment (start, end) submission indices
     staged: tuple           # per-segment insert chunk ([m, 2] f32 or
@@ -225,6 +227,10 @@ class MixedReport(NamedTuple):
     #                         set from this, never by re-deriving the
     #                         chunking policy
     sort: str
+    maintenance: tuple = ()  # per-segment (segment_index, decision)
+    #                         entries from the server's ``on_segment``
+    #                         hook (maintenance-policy servers only);
+    #                         segments with no decision are absent
 
 
 def serve_mixed_workload(server, queries: np.ndarray,
@@ -280,8 +286,9 @@ def serve_mixed_workload(server, queries: np.ndarray,
                 return count, 1
         return count, 0
 
-    outs, bounds = [], []
+    outs, bounds, maint = [], [], []
     n_batches = n_reserved = n_inserts = n_repacks = 0
+    on_segment = getattr(server, "on_segment", None)
     for s in range(n_segments):
         ni, nr = _stage(chunks[s])
         n_inserts += ni
@@ -295,6 +302,14 @@ def serve_mixed_workload(server, queries: np.ndarray,
         bounds.append((lo, hi))
         n_batches += rep.n_batches
         n_reserved += rep.n_reserved
+        # between-segments maintenance window: the server rolls its
+        # signal window and (policy servers) repacks/refits/demotes —
+        # never under a running segment, so each segment still serves
+        # against frozen state and stays bit-identical under sorting
+        if on_segment is not None:
+            decision = on_segment()
+            if decision is not None:
+                maint.append((s, decision))
     ni, nr = _stage(chunks[n_segments])
     n_inserts += ni
     n_repacks += nr
@@ -303,4 +318,4 @@ def serve_mixed_workload(server, queries: np.ndarray,
                        n_reserved=n_reserved, n_inserts=n_inserts,
                        n_repacks=n_repacks, n_segments=n_segments,
                        seg_bounds=tuple(bounds), staged=tuple(chunks),
-                       sort=sort)
+                       sort=sort, maintenance=tuple(maint))

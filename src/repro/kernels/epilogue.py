@@ -1,0 +1,98 @@
+"""Shared compaction-epilogue helpers for the fused Pallas kernels.
+
+Three kernels end in the same move: a ``[TB, TL]`` boolean tile of "this
+(query, column) pair is selected" must become a compact per-row slot table
+``[TB, KP]`` of the selected columns in column order, plus a running
+per-row count — without ever materializing the mask outside VMEM. The
+fused R-path traversal (``traverse_fused``), the fused MLP prediction
+(``mlp_infer``) and the delta-buffer probe (``delta_probe``) all import
+these two epilogues; this module is the single home so the rank scheme
+cannot drift between kernels (it used to live in ``traverse_fused`` with
+the other two importing it across kernel modules).
+
+Both forms realize ``compact_mask_counted``'s cumsum-rank scheme per
+tile, carrying the running per-row total across tiles in the *revisited*
+output blocks (both output blocks map to ``(i, 0)`` in every caller, so
+they stay VMEM-resident across the column-tile sweep):
+
+* ``compact_epilogue_tpu`` — the Mosaic-friendly hardware form: chunked
+  rank-equality compares + lane-sum (ranks are unique per row, so sum ==
+  select), each ``kc``-wide chunk ``pl.when``-guarded by the tile's
+  [min, max] rank range;
+* ``compact_epilogue_interp`` — the interpret-mode form: value-level
+  rowwise binary search of each slot's rank over the tile's inclusive
+  prefix count (interpret mode functionalizes ref-touching conds, so the
+  scatter must be unconditional value ops).
+
+Pure code motion from ``traverse_fused``; the old ``_compact_epilogue_*``
+names remain importable from there.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def compact_epilogue_tpu(mask, col, idx_ref, cnt_ref, kp: int, kc: int):
+    """TPU-form cumsum-rank compaction epilogue over one ``[TB, TL]`` tile.
+
+    Ranks the tile's set lanes by exclusive prefix count continued from the
+    running per-row total in ``cnt_ref`` (the revisited ``[TB, 1]`` output
+    block) and scatters ``col`` values of ranks ``< kp`` into ``idx_ref``
+    (the revisited ``[TB, KP]`` slot block) as ``kc``-wide chunks of
+    rank-equality compares + lane-sum — ranks are unique per row, so sum ==
+    select, and Mosaic vectorizes dense compare/reduce where it would not a
+    lane scatter. Each chunk is ``pl.when``-guarded by the tile's
+    [min, max] rank range. Callers guard the whole epilogue on tile
+    liveness; shared by ``traverse_compact_t``, ``mlp_infer`` and
+    ``delta_probe``. ``mask`` is the tile's set-lane mask, ``col`` the
+    value to scatter (global leaf ids / buffer slot ids).
+    """
+    tb_, tl_ = mask.shape
+    m = mask.astype(jnp.int32)
+    base = cnt_ref[:, 0][:, None]            # [TB, 1]
+    rank = base + jnp.cumsum(m, axis=1) - m  # global exclusive
+    cnt_ref[:, 0] = base[:, 0] + jnp.sum(m, axis=1)
+    w = jnp.where(mask, col, 0)
+    sl = jnp.where(mask, rank, -1)           # -1 never matches
+    lo = jnp.min(base)                       # tile's rank range
+    hi = jnp.max(sl)
+    for s in range(0, kp, kc):
+        @pl.when((lo < s + kc) & (hi >= s))
+        def _chunk(s=s):
+            kio = s + jax.lax.broadcasted_iota(
+                jnp.int32, (tb_, tl_, kc), 2)
+            hit = sl[:, :, None] == kio
+            contrib = jnp.sum(
+                jnp.where(hit, w[:, :, None], 0), axis=1)
+            idx_ref[:, s:s + kc] = \
+                idx_ref[:, s:s + kc] + contrib
+
+
+def compact_epilogue_interp(mask, j, tl: int, kp: int, idx_ref, cnt_ref):
+    """Interpret-form compaction epilogue: value-level rowwise binary
+    search of each slot's rank over the tile's inclusive prefix count
+    (``compact_mask_counted``'s scheme), with the running rank base carried
+    across tiles in the revisited output blocks. Output blocks are
+    uninitialized before the first visit — the ``j == 0`` reads are masked
+    at value level (no ref-touching cond). Shared by ``traverse_compact_t``,
+    ``mlp_infer`` and ``delta_probe``.
+    """
+    tb_ = mask.shape[0]
+    m = mask.astype(jnp.int32)
+    prev_idx = jnp.where(j == 0, 0, idx_ref[:, :])
+    prev_cnt = jnp.where(j == 0, 0, cnt_ref[:, :])
+    base = prev_cnt[:, 0]                        # [TB]
+    cs = jnp.cumsum(m, axis=1)                   # [TB, TL]
+    # slot t - 1 holds the column whose inclusive prefix count first
+    # reaches t - base; slots filled by earlier tiles keep their value,
+    # later slots wait for a later tile.
+    targets = 1 + jax.lax.broadcasted_iota(jnp.int32, (tb_, kp), 1)
+    rel = targets - base[:, None]                # [TB, KP]
+    pos = jax.vmap(lambda c, t: jnp.searchsorted(
+        c, t, side="left"))(cs, rel)
+    newly = (rel >= 1) & (rel <= cs[:, -1][:, None])
+    idx_ref[:, :] = jnp.where(
+        newly, j * tl + pos.astype(jnp.int32), prev_idx)
+    cnt_ref[:, :] = (base + cs[:, -1])[:, None]

@@ -64,9 +64,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.epilogue import (
+    compact_epilogue_interp as _compact_epilogue_interp,
+    compact_epilogue_tpu as _compact_epilogue_tpu,
+)
 from repro.kernels.traverse_fused import (COMPACT_KC, LANE,
-                                          _compact_epilogue_interp,
-                                          _compact_epilogue_tpu,
                                           tuned_tiles_for_key)
 
 DEF_TB = 256    # query-tile (sublane axis)

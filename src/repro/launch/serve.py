@@ -35,7 +35,7 @@ import numpy as np
 from repro.core import build, device_tree as dt, engine, labels, schedule
 from repro.core import geometry as geo
 from repro.core.hybrid import hybrid_query
-from repro.core.monitor import EngineFreshServer, FreshServer
+from repro.core.monitor import DefaultPolicy, EngineFreshServer, FreshServer
 from repro.core.rtree import RTree
 from repro.launch import mesh as pmesh
 from repro.data import synth
@@ -92,10 +92,13 @@ def make_serve_fns(hyb, args, devices):
     return narrow, wide, "truncated", contextlib.nullcontext(), fused
 
 
-def make_fresh_server(base, hyb, args, devices):
+def make_fresh_server(base, hyb, args, devices, fit_state=None,
+                      policy=None):
     """Build the mixed-stream server: ``FreshServer`` (single-device
     hybrid path) or ``EngineFreshServer`` (shard_map engine, replicated
-    delta) plus the mesh context."""
+    delta) plus the mesh context. ``fit_state``/``policy`` turn on the
+    online instance-optimization loop (span-diff repacks + incremental
+    ``refit_cells`` chunks between segments)."""
     import contextlib
     if args.distributed and len(devices) > 1:
         n = len(devices)
@@ -106,17 +109,29 @@ def make_fresh_server(base, hyb, args, devices):
                                   use_kernel=args.kernel)
         srv = EngineFreshServer(base, hyb, mesh, cfg, kind=args.classifier,
                                 n_model=n_model, delta_cap=args.delta_cap,
-                                wide_factor=args.wide_factor)
+                                wide_factor=args.wide_factor,
+                                fit_state=fit_state, policy=policy)
         return srv, pmesh.set_mesh(mesh)
     srv = FreshServer(base, hyb, delta_cap=args.delta_cap,
                       max_visited=args.max_visited, max_results=512,
-                      wide_factor=args.wide_factor, use_kernel=args.kernel)
+                      wide_factor=args.wide_factor, use_kernel=args.kernel,
+                      fit_state=fit_state, policy=policy)
     return srv, contextlib.nullcontext()
 
 
 def serve_mixed(base, extra, hyb, wl, args, rep) -> None:
     """Drive the mixed read/write stream and report freshness stats."""
-    server, ctx = make_fresh_server(base, hyb, args, jax.devices())
+    fit_state = policy = None
+    if args.policy != "none":
+        if rep.fit_state is None or args.classifier == "forest":
+            print("# policy: no per-cell FitState for this classifier — "
+                  "maintenance loop disabled")
+        else:
+            fit_state = rep.fit_state
+            policy = DefaultPolicy(refit_chunk=args.refit_chunk,
+                                   repack_at=args.repack_at)
+    server, ctx = make_fresh_server(base, hyb, args, jax.devices(),
+                                    fit_state=fit_state, policy=policy)
     bbox = schedule.workload_bbox(wl.queries)
     with ctx:
         t0 = time.time()
@@ -141,9 +156,26 @@ def serve_mixed(base, extra, hyb, wl, args, rep) -> None:
           f"{acc:.2f} leaf accesses/query, {100*ai:.1f}% AI path, "
           f"{100*guarded:.1f}% guard-demoted, {d_hits} delta hits")
     print(f"# freshness: {fs.ok_cells}/{fs.n_cells} cells serve-eligible "
-          f"({fs.fit_cells} exact-fit, {fs.stale_cells} stale), delta "
+          f"({fs.fit_cells} exact-fit, {fs.stale_cells} stale, "
+          f"{fs.demoted_cells} demoted), delta "
           f"fill {fs.delta_fill}/{args.delta_cap}, "
           f"{fs.n_repacks} repacks")
+    if policy is not None:
+        n_prep = sum(d.repack for _, d in mixed.maintenance)
+        n_ref = sum(r.cells_refit for r in server.refits)
+        n_dem = sum(d.demote.size for _, d in mixed.maintenance)
+        n_pro = sum(d.promote.size for _, d in mixed.maintenance)
+        print(f"# policy: {n_prep} repacks, {n_ref} cell refits, "
+              f"{n_dem} demotions, {n_pro} promotions across "
+              f"{len(mixed.maintenance)} segment decisions")
+        # recovery curve: guard/AI rates per segment show the AI path
+        # coming back chunk by chunk after each span-diff repack
+        g = np.asarray(st.guarded)
+        u = np.asarray(st.used_ai)
+        curve = "  ".join(
+            f"{s}:{g[lo:hi].mean():.2f}/{u[lo:hi].mean():.2f}"
+            for s, (lo, hi) in enumerate(mixed.seg_bounds))
+        print(f"# recovery (seg:guarded/used_ai): {curve}")
     # freshness oracle: each segment's queries against exactly the points
     # visible to it (schedule.visible_segments — the scheduler's actual
     # staging, never re-derived from the policy)
@@ -195,6 +227,15 @@ def main() -> None:
                         "(0 = never; buffer must then hold them all)")
     p.add_argument("--delta-cap", type=int, default=8192,
                    help="delta store capacity (points)")
+    p.add_argument("--policy", default="none", choices=("none", "default"),
+                   help="between-segment maintenance policy: span-diff "
+                        "repacks + stats-driven incremental refit chunks "
+                        "(needs a per-cell classifier: knn or mlp)")
+    p.add_argument("--refit-chunk", type=int, default=4,
+                   help="max stale cells retrained per segment decision")
+    p.add_argument("--repack-at", type=float, default=0.75,
+                   help="policy repacks once the delta buffer passes this "
+                        "fill fraction")
     args = p.parse_args()
 
     gen = synth.tweets_like if args.dataset == "tweets" else synth.crimes_like

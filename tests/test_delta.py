@@ -178,7 +178,8 @@ def test_merge_hybrid_result_placement_and_truncation():
     res = HybridResult(routed_high=zb, used_ai=zb,
                        n_results=jnp.asarray([2, 0, 5], jnp.int32),
                        result_ids=rid, leaf_accesses=z, n_visited_r=z,
-                       n_true=z, truncated=zb, guarded=zb)
+                       n_true=z, truncated=zb, guarded=zb,
+                       mispredict=zb, cell_id=z - 1)
     hits = deltalib.DeltaHits(
         slot_idx=jnp.asarray([[0, 1, 0, 0], [2, 0, 0, 0], [0, 1, 2, 3]],
                              jnp.int32),

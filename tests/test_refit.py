@@ -1,0 +1,345 @@
+"""The online instance-optimization loop's contracts.
+
+* ``build.refit_cells`` ≡ a from-scratch ``fit_airtree`` on the new
+  tree — bank rows, label maps, guard flags and served results all
+  bit-compatible — across host-tree insert sequences, in one call or
+  chunked in any order (the property the per-cell training pipeline's
+  determinism was built to buy);
+* zero-query cells install guarded (``cell_ok=False``) — an untrained
+  cell must never serve the AI path;
+* the serving loop recovers the AI path after an online repack through
+  incremental refit chunks alone — no full ``fit_airtree`` on the
+  serve path;
+* monitor policy mechanics: rolling-median signals, span-diff repack
+  accounting, demote/promote levers.
+
+Runs under real hypothesis when installed, else the fixed-seed example
+fallback in ``tests/helpers/hypo.py``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from helpers.hypo import given, settings, st
+
+from repro.core import build, device_tree as dt, labels, schedule
+from repro.core import spans as spanslib
+from repro.core.hybrid import hybrid_query
+from repro.core.grid import Grid
+from repro.core.monitor import (DefaultPolicy, FreshnessMonitor,
+                                FreshServer, MaintenanceDecision)
+from repro.core.rtree import RTree
+from repro.data import synth
+
+LKW = {"max_results": 2048}
+
+
+def _world(seed, n_pts=2000, n_q=100):
+    pts = synth.tweets_like(n_pts, seed=seed)
+    tree = RTree(max_entries=32).insert_all(pts)
+    dtree = dt.flatten(tree)
+    qs = synth.synth_queries(pts, 1e-3, n_q, seed=seed + 1)
+    wl = labels.make_workload(dtree, qs, **LKW)
+    return pts, tree, dtree, qs, wl
+
+
+def _fit(dtree, wl, kind, state=None):
+    """Pinned-pad fit: a refit comparator must train in the exact shape
+    world (label/query pads) the incremental path inherited."""
+    kw = dict(kind=kind, grid_sizes=(4,), label_kwargs=LKW)
+    if kind == "mlp":
+        kw.update(mlp_hidden=16, mlp_epochs=800)
+    if state is not None:
+        kw.update(max_labels=state.cl, max_queries=state.qp)
+    return build.fit_airtree(dtree, wl, **kw)
+
+
+def _insert_corner(pts, tree, seed, m):
+    """Host-tree inserts clustered in one data corner — the localized
+    change that leaves most cell spans untouched."""
+    rng = np.random.default_rng(seed)
+    lo, hi = pts.min(axis=0), pts.max(axis=0)
+    corner = lo + rng.uniform(0.0, 0.1, 2) * (hi - lo)
+    newp = (corner + np.abs(rng.normal(0, 0.004, (m, 2)))).astype(np.float32)
+    tree.insert_all(newp)
+    return newp
+
+
+def _assert_same_bank(a, b, kind):
+    fields = (("w1", "b1", "w2", "b2") if kind == "mlp"
+              else ("feats", "labels"))
+    for f in fields + ("label_map", "lmask"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"bank field {f} diverged")
+
+
+def _assert_same_serving(h_refit, h_full, qs):
+    """Served results bit-compatible once the router is held fixed
+    (refit deliberately keeps the original router — it generalizes
+    over α, and retraining it is the policy's business, not refit's)."""
+    h_full = dataclasses.replace(h_full, router=h_refit.router)
+    a = hybrid_query(h_refit, jnp.asarray(qs), max_visited=256,
+                     max_results=512)
+    b = hybrid_query(h_full, jnp.asarray(qs), max_visited=256,
+                     max_results=512)
+    for f in ("used_ai", "n_results", "result_ids", "guarded",
+              "leaf_accesses", "mispredict"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"served field {f} diverged")
+
+
+# ---------------------------------------------------------------------------
+# refit ≡ full fit
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(5, 40))
+def test_refit_cells_equals_full_fit_knn(seed, m):
+    pts, tree, dtree, qs, wl = _world(seed % 1000)
+    hyb, rep = _fit(dtree, wl, "knn")
+    state = rep.fit_state
+
+    _insert_corner(pts, tree, seed, m)
+    dtree2 = dt.flatten(tree)
+    hyb2 = dataclasses.replace(hyb, tree=dtree2)
+    hyb_r, state_r, rrep = build.refit_cells(hyb2, state)
+    assert rrep.cells_stale_left == 0
+
+    wl2 = labels.make_workload(dtree2, qs, **LKW)
+    hyb_f, rep_f = _fit(dtree2, wl2, "knn", state)
+    _assert_same_bank(hyb_r.ait.bank, hyb_f.ait.bank, "knn")
+    np.testing.assert_array_equal(np.asarray(hyb_r.ait.cell_ok),
+                                  np.asarray(hyb_f.ait.cell_ok))
+    ok = np.asarray(state_r.exact_valid)
+    assert ok.all(), "a drained refit must certify every query"
+    np.testing.assert_array_equal(np.asarray(state_r.exact),
+                                  np.asarray(rep_f.fit_state.exact))
+    _assert_same_serving(hyb_r, hyb_f, qs)
+
+
+def test_refit_cells_equals_full_fit_mlp():
+    """One fixed mlp case (training dominates the runtime): the per-cell
+    decoupled pipeline must splice retrained rows bit-identically to a
+    from-scratch fit of the whole bank."""
+    pts, tree, dtree, qs, wl = _world(3)
+    hyb, rep = _fit(dtree, wl, "mlp")
+    state = rep.fit_state
+
+    _insert_corner(pts, tree, seed=7, m=25)
+    dtree2 = dt.flatten(tree)
+    hyb2 = dataclasses.replace(hyb, tree=dtree2)
+    hyb_r, state_r, rrep = build.refit_cells(hyb2, state)
+    assert 0 < rrep.cells_changed < state.n_cells, \
+        "scenario must exercise a *partial* refit"
+
+    wl2 = labels.make_workload(dtree2, qs, **LKW)
+    hyb_f, rep_f = _fit(dtree2, wl2, "mlp", state)
+    _assert_same_bank(hyb_r.ait.bank, hyb_f.ait.bank, "mlp")
+    np.testing.assert_array_equal(np.asarray(hyb_r.ait.cell_ok),
+                                  np.asarray(hyb_f.ait.cell_ok))
+    _assert_same_serving(hyb_r, hyb_f, qs)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_chunked_refit_order_invariant(seed):
+    """Spreading the stale set over chunks — in any order — lands on the
+    same final state as one drain: certificates converge and the spliced
+    bank is identical."""
+    pts, tree, dtree, qs, wl = _world(seed % 1000)
+    hyb, rep = _fit(dtree, wl, "knn")
+    state = rep.fit_state
+    _insert_corner(pts, tree, seed, 30)
+    dtree2 = dt.flatten(tree)
+    hyb2 = dataclasses.replace(hyb, tree=dtree2)
+
+    sigs2 = spanslib.leaf_signatures(dtree2)
+    spans2 = spanslib.cell_spans(dtree2, hyb.ait.grid, sigs=sigs2)
+    changed, _ = spanslib.diff_spans(state.spans, spans2, state.sigs, sigs2)
+    ch = np.flatnonzero(changed)
+    if ch.size < 2:
+        return      # nothing to chunk — vacuous example
+
+    h_one, s_one, _ = build.refit_cells(hyb2, state)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(ch)
+    cut = int(rng.integers(1, ch.size))
+    h_c, s_c = hyb2, state
+    for chunk in (perm[:cut], perm[cut:]):
+        h_c, s_c, _ = build.refit_cells(h_c, s_c, chunk)
+    assert s_c.cell_stale.sum() == 0
+    _assert_same_bank(h_c.ait.bank, h_one.ait.bank, "knn")
+    np.testing.assert_array_equal(np.asarray(h_c.ait.cell_ok),
+                                  np.asarray(h_one.ait.cell_ok))
+    np.testing.assert_array_equal(s_c.exact & s_c.exact_valid,
+                                  s_one.exact & s_one.exact_valid)
+
+
+# ---------------------------------------------------------------------------
+# zero-query cells
+# ---------------------------------------------------------------------------
+
+def test_zero_query_cells_install_guarded():
+    """A grid cell no training query touches has no evidence and no
+    trained model — it must come out of the build with ``cell_ok=False``
+    so the guard demotes its queries to the exact R path."""
+    pts = synth.tweets_like(2000, seed=11)
+    tree = RTree(max_entries=32).insert_all(pts)
+    dtree = dt.flatten(tree)
+    # confine the workload to the lower-left data quadrant: with a 4×4
+    # grid over the *query* bbox this still leaves upper cells empty of
+    # anchors only if we skew hard — so synthesize in a thin strip
+    lo, hi = pts.min(axis=0), pts.max(axis=0)
+    strip = pts[(pts[:, 1] <= lo[1] + 0.2 * (hi[1] - lo[1]))]
+    qs = synth.synth_queries(strip, 1e-3, 80, seed=12)
+    # widen the grid frame well past the strip so upper rows see nothing
+    wl = labels.make_workload(dtree, qs, **LKW)
+    hyb, rep = build.fit_airtree(dtree, wl, kind="knn", grid_sizes=(4,),
+                                 label_kwargs=LKW)
+    g = hyb.ait.grid
+    st_ = rep.fit_state
+    touched = np.zeros((g.n_cells,), bool)
+    ids, valid = st_.cell_ids, st_.cell_valid
+    touched[ids[valid]] = True
+    assert not touched.all(), "scenario must leave some cells query-free"
+    ok = np.asarray(hyb.ait.cell_ok)
+    assert not ok[~touched].any(), \
+        "zero-query cells must install with cell_ok=False"
+
+
+# ---------------------------------------------------------------------------
+# recovery without a full refit on the serve path
+# ---------------------------------------------------------------------------
+
+def test_mixed_stream_recovers_without_full_fit(monkeypatch):
+    pts, tree, dtree, qs, wl = _world(21, n_pts=3000, n_q=150)
+    hyb, rep = _fit(dtree, wl, "knn")
+
+    def _no_full_fit(*a, **k):     # the loop's core guarantee
+        raise AssertionError("full fit_airtree ran on the serve path")
+    monkeypatch.setattr(build, "fit_airtree", _no_full_fit)
+
+    srv = FreshServer(pts, hyb, delta_cap=256, max_visited=256,
+                      max_results=512, fit_state=rep.fit_state,
+                      policy=DefaultPolicy(refit_chunk=4, repack_at=0.1))
+    stream = np.tile(qs, (4, 1))
+    rng = np.random.default_rng(5)
+    lo, hi = pts.min(axis=0), pts.max(axis=0)
+    corner = lo + 0.02 * (hi - lo)
+    ins = (corner + np.abs(rng.normal(0, 0.004, (200, 2)))
+           ).astype(np.float32)
+    mixed = schedule.serve_mixed_workload(srv, stream, ins, batch=50,
+                                          insert_every=1, repack_every=0)
+
+    n_repacks = sum(d.repack for _, d in mixed.maintenance)
+    assert n_repacks >= 1, "the policy must have repacked mid-stream"
+    assert any(r.cells_refit > 0 for r in srv.refits), \
+        "recovery must run through incremental refit chunks"
+    # the AI path must come back after a repack knocked it out: some
+    # segment *after* the first policy repack serves AI-path queries
+    first_rp = next(s for s, d in mixed.maintenance if d.repack)
+    u = np.asarray(mixed.stats.used_ai)
+    post = [u[lo:hi].mean() for s, (lo, hi) in enumerate(mixed.seg_bounds)
+            if s > first_rp]
+    assert max(post) > 0.2, f"AI path never recovered: {post}"
+    # and serving stayed exact throughout
+    for (qlo, qhi), visible in schedule.visible_segments(mixed, pts):
+        q = stream[qlo:qhi]
+        got = np.asarray(mixed.stats.n_results)[qlo:qhi]
+        inside = ((visible[None, :, 0] >= q[:, None, 0])
+                  & (visible[None, :, 0] <= q[:, None, 2])
+                  & (visible[None, :, 1] >= q[:, None, 1])
+                  & (visible[None, :, 1] <= q[:, None, 3]))
+        np.testing.assert_array_equal(inside.sum(axis=1), got)
+
+
+# ---------------------------------------------------------------------------
+# monitor policy mechanics
+# ---------------------------------------------------------------------------
+
+def _grid4():
+    return Grid(bbox=jnp.asarray([0., 0., 1., 1.]), g=2)
+
+
+class _FakeStats:
+    def __init__(self, cell_id, **k):
+        self.cell_id = np.asarray(cell_id)
+        n = self.cell_id.shape[0]
+        for f in ("guarded", "mispredict", "used_ai", "delta_hits"):
+            setattr(self, f, np.asarray(k.get(f, np.zeros(n, np.int64))))
+
+
+def test_rolling_median_rates():
+    mon = FreshnessMonitor(_grid4(), np.ones(4, bool), window=3)
+    # cell 0: mispredict rates 0, 1, 0 across three segments → median 0
+    # cell 1: rates 1, 1, 0 → median 1; cell 2: no traffic → 0
+    for mis0, mis1 in ((0, 1), (1, 1), (0, 0)):
+        mon.note_serve(_FakeStats([0, 1], mispredict=[mis0, mis1]))
+        mon.roll_segment()
+    r = mon.rolling("mispredict")
+    np.testing.assert_allclose(r[:3], [0.0, 1.0, 0.0])
+    assert mon.traffic()[0] == 1.0 and mon.traffic()[2] == 0.0
+    # overflow rows (cell_id = -1) are dropped, not attributed
+    mon.note_serve(_FakeStats([-1, -1]))
+    mon.roll_segment()
+    assert mon._window[-1]["n"].sum() == 0
+
+
+def test_note_repack_span_diff_vs_legacy():
+    mon = FreshnessMonitor(_grid4(), np.ones(4, bool))
+    mon.note_inserts(np.asarray([[0.1, 0.1]]))
+    assert not mon.cell_ok()[0]
+    # legacy: whole bank stale
+    mon.note_repack()
+    assert not mon.cell_ok().any()
+    # span-diff: only the changed cells; insert counters fold in
+    mon2 = FreshnessMonitor(_grid4(), np.ones(4, bool))
+    mon2.note_inserts(np.asarray([[0.1, 0.1]]))
+    mon2.note_repack(changed=np.asarray([True, False, False, False]))
+    np.testing.assert_array_equal(mon2.cell_ok(), [False, True, True, True])
+    assert mon2.stats().span_stale_cells == 1
+    # a refit chunk drains it
+    mon2.note_refit_cells(np.ones(4, bool), np.zeros(4, bool))
+    assert mon2.cell_ok().all()
+
+
+def test_force_demote_and_policy_promote():
+    mon = FreshnessMonitor(_grid4(), np.ones(4, bool), window=2)
+    pol = DefaultPolicy(refit_chunk=2, demote_mispredict=0.25,
+                        min_traffic=2.0, promote_after=2)
+    # two segments of heavy mispredict traffic on cell 3
+    for _ in range(2):
+        mon.note_serve(_FakeStats([3] * 4, mispredict=[1, 1, 0, 1]))
+        mon.roll_segment()
+    d = pol.decide(mon, delta_fill=0, delta_capacity=100)
+    np.testing.assert_array_equal(d.demote, [3])
+    mon.force_demote(d.demote)
+    assert not mon.cell_ok()[3] and mon.stats().demoted_cells == 1
+    # demoted cells stop accruing evidence; after promote_after segments
+    # the policy schedules a forced refit and readmission
+    mon.roll_segment()
+    mon.roll_segment()
+    d2 = pol.decide(mon, delta_fill=0, delta_capacity=100)
+    np.testing.assert_array_equal(d2.promote, [3])
+    mon.clear_demote(d2.promote)
+    assert mon.cell_ok()[3]
+
+
+def test_policy_refit_chunk_prefers_hot_cells():
+    mon = FreshnessMonitor(_grid4(), np.ones(4, bool), window=2)
+    mon.span_stale[:] = [True, True, True, False]
+    for _ in range(2):
+        mon.note_serve(_FakeStats([2, 2, 2, 0]))
+        mon.roll_segment()
+    d = DefaultPolicy(refit_chunk=2).decide(mon, delta_fill=0,
+                                            delta_capacity=100)
+    assert 2 in d.refit and d.refit.size == 2, d.refit
+    assert isinstance(d, MaintenanceDecision)
+    # repack trips on fill fraction
+    assert DefaultPolicy(repack_at=0.5).decide(
+        mon, delta_fill=50, delta_capacity=100).repack
+    assert not DefaultPolicy(repack_at=0.5).decide(
+        mon, delta_fill=49, delta_capacity=100).repack
