@@ -16,9 +16,12 @@ smoke: test
 
 # Toy-scale spatial-scheduler streaming benchmark; asserts sorted serving
 # is bit-identical to unsorted, so the serving loop can't silently rot.
-# Wired into the fast CI job.
+# The latency smoke adds the open-loop gates: zero silent drops, degraded
+# accounting exact vs a brute-force oracle, and deadline-aware dispatch
+# beating fixed-full-batch goodput at overload. Wired into the fast CI job.
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.engine_bench --smoke
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.latency_bench --smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --check
 
 # Toy-scale run of both user-facing examples (they are living docs — the

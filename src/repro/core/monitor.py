@@ -41,7 +41,6 @@ moved go stale, and the policy retrains them incrementally through
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Callable, NamedTuple, Optional
 
 import numpy as np
@@ -49,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import delta as deltalib
+from repro.core import telemetry
 from repro.core.grid import Grid, cell_range
 from repro.core.hybrid import HybridResult, HybridTree, hybrid_query
 
@@ -130,14 +130,12 @@ class FreshnessMonitor:
         self.n_inserts = 0
         self.n_repacks = 0
         self.seg_counter = 0
-        self._window = deque(maxlen=int(window))
-        self._reset_segment()
+        # the rolling-window machinery lives in core.telemetry so the
+        # streaming runtime's latency stats share one implementation
+        self._window = telemetry.SegmentWindow(
+            grid.n_cells, _SERVE_FIELDS, window=window)
 
     # -- serve-signal accumulation ----------------------------------------
-
-    def _reset_segment(self) -> None:
-        C = self.fit_ok.shape[0]
-        self._seg = {f: np.zeros((C,), np.int64) for f in _SERVE_FIELDS}
 
     def note_serve(self, stats) -> None:
         """Accumulate one served batch's per-query signals per cell.
@@ -152,16 +150,14 @@ class FreshnessMonitor:
         cid = np.asarray(stats.cell_id).ravel().astype(np.int64)
         keep = cid >= 0
         cid = cid[keep]
-        np.add.at(self._seg["n"], cid, 1)
-        for f in _SERVE_FIELDS[1:]:
-            v = np.asarray(getattr(stats, f)).ravel()[keep]
-            np.add.at(self._seg[f], cid, v.astype(np.int64))
+        self._window.add(cid, {
+            f: np.asarray(getattr(stats, f)).ravel()[keep]
+            for f in _SERVE_FIELDS[1:]})
 
     def roll_segment(self) -> None:
         """Close the current segment into the rolling window."""
-        self._window.append(self._seg)
+        self._window.roll()
         self.seg_counter += 1
-        self._reset_segment()
 
     def rolling(self, field: str) -> np.ndarray:
         """[C] f64 rolling-median per-cell *rate* of ``field`` over the
@@ -169,23 +165,11 @@ class FreshnessMonitor:
         no traffic don't vote — all-quiet cells rate 0)."""
         if field not in _SERVE_FIELDS[1:]:
             raise ValueError(f"unknown serve field {field!r}")
-        if not self._window:
-            return np.zeros((self.fit_ok.shape[0],), np.float64)
-        n = np.stack([s["n"] for s in self._window]).astype(np.float64)
-        v = np.stack([s[field] for s in self._window]).astype(np.float64)
-        rates = np.where(n > 0, v / np.maximum(n, 1), np.nan)
-        voters = (n > 0).any(axis=0)
-        med = np.zeros((self.fit_ok.shape[0],), np.float64)
-        if voters.any():
-            med[voters] = np.nanmedian(rates[:, voters], axis=0)
-        return med
+        return self._window.rate(field)
 
     def traffic(self) -> np.ndarray:
         """[C] f64 rolling-median per-cell queries per segment."""
-        if not self._window:
-            return np.zeros((self.fit_ok.shape[0],), np.float64)
-        n = np.stack([s["n"] for s in self._window]).astype(np.float64)
-        return np.median(n, axis=0)
+        return self._window.count_median()
 
     def _cells_of_points(self, points: np.ndarray) -> np.ndarray:
         # map points as degenerate rects through the grid's own
@@ -263,9 +247,8 @@ class FreshnessMonitor:
         self.forced_demote = np.zeros_like(self.fit_ok, dtype=bool)
         self.demoted_at = np.zeros_like(self.fit_ok, dtype=np.int64)
         self.n_inserts = 0
-        if self.fit_ok.shape[0] != self._seg["n"].shape[0]:
-            self._window.clear()
-            self._reset_segment()
+        if self.fit_ok.shape[0] != self._window.n_keys:
+            self._window.clear(n_keys=self.fit_ok.shape[0])
 
     def cell_ok(self) -> np.ndarray:
         """[C] bool: serve-eligible = certified fit AND no inserts since

@@ -36,15 +36,30 @@ def workload_bbox(queries: np.ndarray) -> np.ndarray:
 
     Keys must be computed against one shared frame or they are not
     comparable across batches; the scheduler pins the workload's own
-    center extent.
+    center extent. Degenerate extents (a single query, or every center
+    coincident along an axis) are widened to a unit span around the
+    collapsed value: the key normalization divides by the extent, and
+    clamping a zero span to an epsilon downstream would amplify f32
+    rounding in ``center − lo`` into arbitrary key orderings — a valid
+    frame must always have positive area.
     """
     c = (np.asarray(queries)[:, :2] + np.asarray(queries)[:, 2:]) / 2.0
-    return np.concatenate([c.min(axis=0), c.max(axis=0)]).astype(np.float32)
+    lo, hi = c.min(axis=0), c.max(axis=0)
+    flat = hi - lo <= 0
+    lo = np.where(flat, lo - 0.5, lo)
+    hi = np.where(flat, hi + 0.5, hi)
+    return np.concatenate([lo, hi]).astype(np.float32)
 
 
 def spatial_keys(queries: np.ndarray, sort: str,
                  bbox: Optional[np.ndarray] = None) -> np.ndarray:
-    """[Q, 4] → [Q] i32 curve keys (zeros for ``sort="none"``)."""
+    """[Q, 4] → [Q] i32 curve keys (zeros for ``sort="none"``).
+
+    A caller-supplied ``bbox`` gets the same degenerate-extent guard as
+    ``workload_bbox``: zero-extent axes are widened to a unit span so
+    the keys stay well-defined (coincident centers all land in one
+    curve cell) instead of leaning on the epsilon clamp downstream.
+    """
     if sort not in SORT_MODES:
         raise ValueError(f"sort must be one of {SORT_MODES}, got {sort!r}")
     q = np.asarray(queries, np.float32)
@@ -53,6 +68,11 @@ def spatial_keys(queries: np.ndarray, sort: str,
     from repro.kernels import ops
     if bbox is None:
         bbox = workload_bbox(q)
+    else:
+        bbox = np.asarray(bbox, np.float32).copy()
+        flat = bbox[2:] - bbox[:2] <= 0
+        bbox[:2] = np.where(flat, bbox[:2] - 0.5, bbox[:2])
+        bbox[2:] = np.where(flat, bbox[2:] + 0.5, bbox[2:])
     return np.asarray(ops.spatial_key(jnp.asarray(q),
                                       bbox=jnp.asarray(bbox), curve=sort))
 

@@ -251,3 +251,123 @@ def test_engine_two_tier_clears_r_truncated():
         np.testing.assert_array_equal(
             np.asarray(getattr(rep.stats, f))[keep],
             np.asarray(getattr(rep_n.stats, f))[keep], err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# degenerate workloads: zero-extent bbox must still produce valid keys
+# ---------------------------------------------------------------------------
+
+def test_workload_bbox_guards_zero_extent():
+    """A single query / coincident centers collapse the center bbox to a
+    point; the guard must widen it to positive area (a zero span would
+    push the key normalization onto an epsilon clamp that amplifies f32
+    rounding into arbitrary key orderings)."""
+    q = _queries(1, seed=0)
+    bbox = schedule.workload_bbox(q)
+    assert bbox[2] - bbox[0] > 0 and bbox[3] - bbox[1] > 0
+    # coincident centers along one axis only: that axis alone widens
+    qx = _queries(8, seed=1)
+    qx[:, 1] = 0.25
+    qx[:, 3] = 0.25     # all centers share y = 0.25
+    bbox = schedule.workload_bbox(qx)
+    assert bbox[3] - bbox[1] == pytest.approx(1.0)
+    c = (qx[:, :2] + qx[:, 2:]) / 2
+    assert bbox[2] - bbox[0] == pytest.approx(
+        c[:, 0].max() - c[:, 0].min(), abs=1e-5)
+
+
+@pytest.mark.parametrize("curve", ["hilbert", "morton"])
+def test_degenerate_workload_keys_valid(curve):
+    """All-coincident centers → one shared key; single query → key
+    computable; a degenerate caller-passed bbox gets the same guard."""
+    q1 = _queries(1, seed=2)
+    k1 = schedule.spatial_keys(q1, curve)
+    assert k1.shape == (1,) and k1.dtype == np.int32
+    qc = np.repeat(q1, 7, axis=0)
+    kc = schedule.spatial_keys(qc, curve)
+    assert np.unique(kc).size == 1     # coincident centers, one curve cell
+    # caller-passed zero-extent bbox (not via workload_bbox)
+    flat = np.array([0.5, 0.5, 0.5, 0.5], np.float32)
+    kf = schedule.spatial_keys(qc, curve, bbox=flat)
+    np.testing.assert_array_equal(kf, np.full((7,), kf[0]))
+    # and the full scheduling + serving path stays well-formed
+    tree = _tree64()
+    sched = schedule.make_schedule(qc, batch=4, sort=curve)
+    assert sorted(sched.order.tolist()) == list(range(7))
+    rep = schedule.serve_workload(_serve_fn(tree), qc, batch=4, sort=curve)
+    base = schedule.serve_workload(_serve_fn(tree), qc, batch=4,
+                                   sort="none")
+    _assert_same(rep.stats, base.stats)
+
+
+# ---------------------------------------------------------------------------
+# serve_workload edges the streaming runtime leans on
+# ---------------------------------------------------------------------------
+
+def test_two_tier_with_empty_truncated_set():
+    """wide_fn wired but nothing overflows: the wide tier must not fire
+    (no re-served rows, no wide batches) and results must equal the
+    narrow-only stream byte for byte."""
+    tree = _tree64()
+    q = _queries(40, seed=6)            # small rects: k=64 never overflows
+    narrow = _serve_fn(tree, k=64, max_results=256)
+    calls = []
+
+    def wide(batch_q):
+        calls.append(1)
+        return narrow(batch_q)
+
+    rep = schedule.serve_workload(narrow, q, batch=16, sort="hilbert",
+                                  wide_fn=wide, trunc_field="truncated")
+    assert not np.asarray(rep.stats.truncated).any()
+    assert rep.n_reserved == 0 and rep.wide_batches == 0
+    assert not calls, "wide tier served an empty re-serve set"
+    base = schedule.serve_workload(narrow, q, batch=16, sort="hilbert")
+    _assert_same(rep.stats, base.stats)
+
+
+def test_serve_workload_batch_one():
+    """batch=1: every batch is a single query (the runtime's deadline
+    dispatch degenerates to this under extreme pressure) — permutation,
+    two-tier merge, and padding must all hold."""
+    tree = _tree64()
+    q = _queries(13, seed=8, big_frac=0.4)
+    narrow = _serve_fn(tree, k=4, max_results=256)
+    wide = _serve_fn(tree, k=64, max_results=256)
+    rep = schedule.serve_workload(narrow, q, batch=1, sort="hilbert",
+                                  wide_fn=wide, trunc_field="truncated")
+    assert rep.n_batches == 13
+    ref = schedule.serve_workload(narrow, q, batch=8, sort="none",
+                                  wide_fn=wide, trunc_field="truncated")
+    _assert_same(rep.stats, ref.stats)
+    assert not np.asarray(rep.stats.truncated).any()
+
+
+def test_two_tier_final_ragged_batch_all_overflow():
+    """The final ragged batch overflows on every valid row: the merge
+    must replace exactly those rows (pad rows dropped, non-overflow rows
+    from earlier batches untouched)."""
+    tree = _tree64()
+    q_small = _queries(16, seed=10)                  # fills one batch
+    q_big = _queries(3, seed=12, big_frac=1.0)       # ragged tail
+    q_big[:, 2:] = q_big[:, :2] + 1.5                # guarantee overflow
+    q = np.concatenate([q_small, q_big])
+    narrow = _serve_fn(tree, k=2, max_results=256)
+    wide = _serve_fn(tree, k=64, max_results=256)
+    rep_n = schedule.serve_workload(narrow, q, batch=16, sort="none")
+    trunc = np.asarray(rep_n.stats.truncated).astype(bool)
+    assert trunc[16:].all(), "fixture too weak: tail row not truncated"
+    rep = schedule.serve_workload(narrow, q, batch=16, sort="none",
+                                  wide_fn=wide, trunc_field="truncated")
+    assert rep.n_reserved == int(trunc.sum())
+    assert not np.asarray(rep.stats.truncated).any()
+    keep = ~trunc
+    for f in type(rep.stats)._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rep.stats, f))[keep],
+            np.asarray(getattr(rep_n.stats, f))[keep], err_msg=f)
+    # overflow rows exact vs the unbounded oracle
+    oracle = traversal.range_query(tree, jnp.asarray(q), max_visited=64,
+                                   max_results=256, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(rep.stats.n_results),
+                                  np.asarray(oracle.n_results))

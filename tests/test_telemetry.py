@@ -1,0 +1,188 @@
+"""core.telemetry primitives + the FreshnessMonitor re-point.
+
+The telemetry module is load-bearing twice over: the runtime's dispatch
+rule trusts the EWMA, its latency report trusts the reservoir, and the
+maintenance policy's signals flow through SegmentWindow — which must
+behave exactly like the rolling-window code it replaced in
+FreshnessMonitor.
+"""
+import numpy as np
+import pytest
+
+from repro.core import telemetry
+
+
+# ---------------------------------------------------------------------------
+# Ewma
+# ---------------------------------------------------------------------------
+
+def test_ewma_default_until_first_observation():
+    e = telemetry.Ewma(0.5, default=7.0)
+    assert e.value == 7.0
+    e.update(1.0)
+    assert e.value == 1.0       # bias correction: first sample is exact
+
+
+def test_ewma_constant_stream_is_exact():
+    e = telemetry.Ewma(0.1)
+    for _ in range(50):
+        e.update(3.25)
+    assert e.value == pytest.approx(3.25)
+
+
+def test_ewma_tracks_shift():
+    e = telemetry.Ewma(0.5)
+    for _ in range(20):
+        e.update(1.0)
+    for _ in range(20):
+        e.update(9.0)
+    assert abs(e.value - 9.0) < 0.01
+
+
+def test_ewma_rejects_bad_alpha():
+    with pytest.raises(ValueError):
+        telemetry.Ewma(0.0)
+    with pytest.raises(ValueError):
+        telemetry.Ewma(1.5)
+
+
+# ---------------------------------------------------------------------------
+# QuantileReservoir
+# ---------------------------------------------------------------------------
+
+def test_reservoir_exact_until_full():
+    r = telemetry.QuantileReservoir(size=100, seed=0)
+    xs = np.arange(50, dtype=np.float64)
+    r.extend(xs)
+    assert len(r) == 50 and r.n == 50
+    assert r.quantile(0.5) == np.quantile(xs, 0.5)
+    s = r.summary()
+    assert s["p99"] == np.quantile(xs, 0.99)
+    assert s["max"] == 49.0
+
+
+def test_reservoir_empty_is_nan():
+    r = telemetry.QuantileReservoir(size=8)
+    assert np.isnan(r.quantile(0.5))
+    assert r.summary()["n"] == 0
+
+
+def test_reservoir_bounded_memory_unbiased_enough():
+    # 20k-long stream through a 2k reservoir: quantiles of U[0,1] land
+    # within a few percent of truth (deterministic under the seed)
+    r = telemetry.QuantileReservoir(size=2048, seed=3)
+    xs = np.random.default_rng(0).uniform(size=20_000)
+    r.extend(xs)
+    assert len(r) == 2048 and r.n == 20_000
+    assert abs(r.quantile(0.5) - 0.5) < 0.05
+    assert abs(r.quantile(0.95) - 0.95) < 0.03
+
+
+def test_reservoir_deterministic_under_seed():
+    a = telemetry.QuantileReservoir(size=64, seed=9)
+    b = telemetry.QuantileReservoir(size=64, seed=9)
+    xs = np.random.default_rng(1).normal(size=1000)
+    a.extend(xs)
+    b.extend(xs)
+    assert a.quantile(0.9) == b.quantile(0.9)
+
+
+# ---------------------------------------------------------------------------
+# SegmentWindow
+# ---------------------------------------------------------------------------
+
+def test_segment_window_rates_and_counts():
+    w = telemetry.SegmentWindow(4, ("n", "hit"), window=8)
+    # two segments: key 0 sees 4 rows with 2 hits, then 2 rows 2 hits
+    w.add(np.array([0, 0, 0, 0]), {"hit": np.array([1, 1, 0, 0])})
+    w.roll()
+    w.add(np.array([0, 0, 3]), {"hit": np.array([1, 1, 0])})
+    w.roll()
+    r = w.rate("hit")
+    assert r[0] == pytest.approx(np.median([0.5, 1.0]))
+    assert r[3] == 0.0          # saw traffic in one segment, zero hits
+    assert r[1] == 0.0          # all-quiet key never votes
+    np.testing.assert_array_equal(w.count_median(),
+                                  np.median([[4, 0, 0, 0], [2, 0, 0, 1]],
+                                            axis=0))
+
+
+def test_segment_window_bounded():
+    w = telemetry.SegmentWindow(1, ("n", "x"), window=2)
+    for v in (0, 0, 1, 1, 1):
+        w.add(np.array([0]), {"x": np.array([v])})
+        w.roll()
+    assert len(w) == 2
+    assert w.rate("x")[0] == 1.0    # the zero segments rolled out
+
+
+def test_segment_window_clear_resizes():
+    w = telemetry.SegmentWindow(2, ("n", "x"))
+    w.add(np.array([0]), {"x": np.array([1])})
+    w.roll()
+    w.clear(n_keys=5)
+    assert len(w) == 0
+    assert w.rate("x").shape == (5,)
+
+
+def test_segment_window_rejects_unknown_and_count_field():
+    w = telemetry.SegmentWindow(2, ("n", "x"))
+    with pytest.raises(ValueError):
+        w.rate("n")
+    with pytest.raises(ValueError):
+        w.rate("nope")
+    with pytest.raises(ValueError):
+        w.add(np.array([0]), {"n": np.array([1])})
+
+
+# ---------------------------------------------------------------------------
+# FreshnessMonitor re-point: behavior identical to the inline window
+# ---------------------------------------------------------------------------
+
+def _monitor(C=9, window=3):
+    from repro.core.grid import Grid
+    from repro.core.monitor import FreshnessMonitor
+    import jax.numpy as jnp
+    g = int(np.sqrt(C))
+    grid = Grid(bbox=jnp.asarray([0.0, 0.0, 1.0, 1.0], jnp.float32), g=g)
+    return FreshnessMonitor(grid, np.ones((C,), bool), window=window)
+
+
+class _Stats:
+    def __init__(self, cell_id, **kw):
+        self.cell_id = np.asarray(cell_id)
+        for f in ("guarded", "mispredict", "used_ai", "delta_hits"):
+            setattr(self, f, np.asarray(
+                kw.get(f, np.zeros_like(self.cell_id))))
+
+
+def test_monitor_rolling_matches_reference_median():
+    m = _monitor()
+    rng = np.random.default_rng(0)
+    ref_segments = []
+    for _ in range(5):      # window=3: the first two segments roll out
+        cid = rng.integers(-1, 9, size=32)
+        mis = rng.integers(0, 2, size=32)
+        m.note_serve(_Stats(cid, mispredict=mis))
+        keep = cid >= 0
+        n = np.zeros(9); v = np.zeros(9)
+        np.add.at(n, cid[keep], 1)
+        np.add.at(v, cid[keep], mis[keep])
+        ref_segments.append((n, v))
+        m.roll_segment()
+    n = np.stack([s[0] for s in ref_segments[-3:]])
+    v = np.stack([s[1] for s in ref_segments[-3:]])
+    rates = np.where(n > 0, v / np.maximum(n, 1), np.nan)
+    exp = np.zeros(9)
+    voters = (n > 0).any(axis=0)
+    exp[voters] = np.nanmedian(rates[:, voters], axis=0)
+    np.testing.assert_allclose(m.rolling("mispredict"), exp)
+    np.testing.assert_allclose(m.traffic(), np.median(n, axis=0))
+
+
+def test_monitor_rolling_empty_window_zero():
+    m = _monitor()
+    assert m.rolling("mispredict").sum() == 0
+    assert m.traffic().sum() == 0
+    with pytest.raises(ValueError):
+        m.rolling("n")
