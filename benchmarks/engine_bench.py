@@ -47,6 +47,52 @@ def serving_throughput(rows: list, n_points: int = 120_000,
                      f"leaf_acc={acc:.2f},tile_bytes={tile}"))
 
 
+def query_type_throughput(rows: list, n_points: int = 120_000,
+                          batch: int = 512) -> None:
+    """Serving throughput of the non-range query types — kNN, point,
+    spatial join — on the same slot-table contract as the range path.
+    Emits ``_qps`` rows so ``run.py --check`` guards them with the same
+    inverted tolerance as ``serve_*_qps``."""
+    from repro.core import hybrid as hybmod, joins
+    from repro.core import knn as knnlib
+
+    pts = synth.tweets_like(n_points, seed=0)
+    dtree = dt.flatten(RTree.str_bulk(pts, max_entries=32))
+    rng = np.random.default_rng(7)
+    centers = pts[rng.integers(0, n_points, batch)].astype(np.float32)
+    pq = jnp.asarray(np.concatenate([centers, centers], axis=1))
+
+    k = 8
+    r = knnlib.default_radius(dtree, k)
+    knn_fn = jax.jit(lambda q: knnlib.knn_query(dtree, q, k=k, radius=r,
+                                                max_visited=64))
+    dtm = _time(lambda: knn_fn(pq))
+    out = knn_fn(pq)
+    acc = float(np.asarray(out.leaf_accesses).mean())
+    rows.append(("knn_serve_qps", batch / dtm,
+                 f"k={k},r={r:.3g},leaf_acc={acc:.2f},"
+                 f"trunc={int(np.asarray(out.truncated).sum())}"))
+
+    outer = jnp.asarray(synth.synth_queries(pts, 1e-4, batch, seed=8))
+    join_fn = jax.jit(lambda q: joins.join_step(dtree, q, max_pairs=32,
+                                                max_visited=64))
+    dtm = _time(lambda: join_fn(outer))
+    out = join_fn(outer)
+    rows.append(("join_outer_qps", batch / dtm,
+                 f"max_pairs=32,pairs={int(np.asarray(out.n_pairs).sum())}"))
+
+    qs = synth.synth_queries(pts, 5e-5, 1500, seed=9)
+    wl = labels.make_workload(dtree, qs)
+    hyb, _ = build.fit_airtree(dtree, wl, kind="knn", grid_sizes=(8,))
+    pt_fn = jax.jit(lambda q: hybmod.point_query(hyb, q))
+    dtm = _time(lambda: pt_fn(pq))
+    out = pt_fn(pq)
+    assert not np.asarray(out.truncated).any(), \
+        "point path truncated — narrowed bounds failed to cover"
+    acc = float(np.asarray(out.leaf_accesses).mean())
+    rows.append(("point_serve_qps", batch / dtm, f"leaf_acc={acc:.2f}"))
+
+
 def _synth_levels(L: int, fanout: int, rng):
     """STR-packed synthetic hierarchy (spatially tight leaf-ID tiles)."""
     from repro.data.synth_tree import synth_levels
@@ -659,6 +705,70 @@ def refit_recovery_smoke(rows: list) -> None:
                  f"recovered<= {budget}seg,oracle=exact"))
 
 
+def knn_smoke(rows: list) -> None:
+    """kNN gate: two-tier distance browsing vs the brute-force
+    k-distance oracle. Every row's reported neighbors must be a
+    bit-exact prefix of the brute kNN — full length when not truncated,
+    the in-radius prefix otherwise — so nothing is ever silently
+    dropped; the deliberately tight narrow radius forces the
+    radius-doubling wide tier to actually run."""
+    from repro.core import knn as knnlib, schedule
+
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(4000, 2))
+    dtree = dt.flatten(RTree.str_bulk(pts, max_entries=16))
+    centers = pts[rng.integers(0, 4000, 160)].astype(np.float32)
+    centers += rng.normal(scale=1e-3, size=centers.shape).astype(np.float32)
+    q = np.concatenate([centers, centers], axis=1)
+    k = 16
+    r = knnlib.default_radius(dtree, k, margin=1.0)
+    narrow, wide = knnlib.make_knn_steps(dtree, k=k, radius=r,
+                                         max_visited=64)
+    t0 = time.perf_counter()
+    rep = schedule.serve_workload(narrow, q, batch=64, sort="hilbert",
+                                  wide_fn=wide, trunc_field="truncated")
+    dt_s = time.perf_counter() - t0
+    assert rep.n_reserved > 0, "knn smoke: wide tier never exercised"
+    bd2, _ = knnlib.knn_brute(pts, centers, k)
+    got = np.asarray(rep.stats.neighbor_d2)
+    tr = np.asarray(rep.stats.truncated)
+    nw = np.asarray(rep.stats.n_within)
+    for j in range(q.shape[0]):
+        kk = k if not tr[j] else min(int(nw[j]), k)
+        assert np.array_equal(got[j, :kk], bd2[j, :kk]), \
+            f"knn smoke: row {j} diverged from the brute prefix"
+    rows.append(("knn_smoke_stream_us", dt_s * 1e6,
+                 f"Q=160,k={k},reserved={rep.n_reserved},"
+                 f"residual={int(tr.sum())}"))
+
+
+def join_smoke(rows: list) -> None:
+    """Join gate: ``spatial_join`` vs the brute-force pair-set oracle.
+    The canonical (outer, point) pair array must equal brute force
+    exactly (zero silent drops), with overflow rows re-served on the
+    wide tier and zero residual truncation."""
+    from repro.core import joins
+
+    rng = np.random.default_rng(1)
+    pts = rng.normal(size=(4000, 2))
+    dtree = dt.flatten(RTree.str_bulk(pts, max_entries=16))
+    lo = pts[rng.integers(0, 4000, 150)].astype(np.float32)
+    wd = rng.uniform(0, 0.2, (150, 2)).astype(np.float32)
+    outer = np.concatenate([lo - wd, lo + wd], axis=1)
+    t0 = time.perf_counter()
+    rep = joins.spatial_join(dtree, outer, batch=64, max_pairs=4,
+                             max_visited=64, wide_factor=64)
+    dt_s = time.perf_counter() - t0
+    assert rep.n_reserved > 0, "join smoke: wide tier never exercised"
+    assert rep.residual_truncated == 0, \
+        f"join smoke: {rep.residual_truncated} rows stayed truncated"
+    bp = joins.join_brute(pts, outer)
+    assert np.array_equal(rep.pairs, bp), \
+        "join smoke: pair set diverged from brute force"
+    rows.append(("join_smoke_stream_us", dt_s * 1e6,
+                 f"Q=150,pairs={rep.n_pairs},reserved={rep.n_reserved}"))
+
+
 def kernel_micro(rows: list) -> None:
     from repro.kernels import ops
     rng = np.random.default_rng(0)
@@ -755,6 +865,8 @@ def main(quick: bool = False) -> list:
     rows: list = []
     serving_throughput(rows, n_points=30_000 if quick else 120_000,
                        batch=256 if quick else 512)
+    query_type_throughput(rows, n_points=20_000 if quick else 120_000,
+                          batch=256 if quick else 512)
     traversal_micro(rows)
     compaction_micro(rows)
     ai_fusion_micro(rows)
@@ -780,13 +892,16 @@ def smoke() -> list:
     repack ≡ rebuild) and the online-refit recovery gate (asserts the
     AI path recovers within ceil(C/chunk) segments after a policy
     repack with full `fit_airtree` hard-disabled, results exact
-    throughout)."""
+    throughout) and the query-type gates (kNN brute-prefix oracle and
+    join pair-set oracle — zero silent drops on either path)."""
     rows: list = []
     # Q deliberately not a multiple of batch: the gate must exercise the
     # ragged tail's pad-and-drop path, not just full batches
     scheduler_bench(rows, Q=400, batch=128, L=2048, check=True)
     freshness_smoke(rows)
     refit_recovery_smoke(rows)
+    knn_smoke(rows)
+    join_smoke(rows)
     for name, val, extra in rows:
         print(f"{name},{val:.2f},{extra}")
     return rows

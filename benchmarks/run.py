@@ -62,6 +62,9 @@ def check(baseline_path: str = _BASELINE,
     engine_bench.compaction_micro(rows)
     engine_bench.ai_fusion_micro(rows)
     engine_bench.scale_bench(rows, quick=True)
+    # same scale as the quick run that wrote the baseline — the qps
+    # comparison is meaningless across dataset sizes
+    engine_bench.query_type_throughput(rows, n_points=20_000, batch=256)
     latency_bench.sim_rows(rows)
 
     bad = 0

@@ -506,6 +506,28 @@ def wide_config(cfg: EngineConfig, factor: int = 8) -> EngineConfig:
     return dataclasses.replace(cfg, max_visited=cfg.max_visited * factor)
 
 
+def point_config(cfg: EngineConfig, max_visited: int = 32) -> EngineConfig:
+    """The point-query fast path's config: single-cell AI routing (a
+    degenerate rect overlaps exactly one grid cell, so the cell window
+    collapses with no overflow) and a traversal narrowed to point-sized
+    bounds. No wide tier pairs with this — the driver asserts
+    ``r_truncated`` stays empty instead of re-serving."""
+    return dataclasses.replace(cfg, max_cells=1,
+                               max_visited=min(cfg.max_visited, max_visited))
+
+
+def make_point_serve_step(mesh, cfg: EngineConfig, *, kind: str,
+                          max_visited: int = 32,
+                          batch_axes=("pod", "data"),
+                          model_axis: str = "model"):
+    """``make_serve_step`` specialized for degenerate-rect point queries
+    (see ``point_config``). Same ``(hybrid, queries, delta_xy=None) →
+    ServeStats`` closure shape as the range step, so the scheduler and
+    the open-loop runtime drive it unchanged."""
+    return make_serve_step(mesh, point_config(cfg, max_visited), kind=kind,
+                           batch_axes=batch_axes, model_axis=model_axis)
+
+
 def make_two_tier_steps(mesh, cfg: EngineConfig, *, kind: str,
                         wide_factor: int = 8, batch_axes=("pod", "data"),
                         model_axis: str = "model"):

@@ -64,6 +64,43 @@ def guard_demoted(ait: AITree, queries: jnp.ndarray) -> jnp.ndarray:
     return jnp.any(valid & ~ait.cell_ok[cell_ids], axis=-1)
 
 
+def is_point_query(queries: jnp.ndarray) -> jnp.ndarray:
+    """[B, 4] → [B] bool: degenerate rects (zero extent on both axes).
+
+    Device-side twin of ``schedule.point_query_mask`` — the detection
+    that dispatches the point-query fast path.
+    """
+    q = queries.astype(jnp.float32)
+    return (q[:, 0] == q[:, 2]) & (q[:, 1] == q[:, 3])
+
+
+@functools.partial(jax.jit, static_argnames=("max_visited", "max_results",
+                                             "use_kernel", "force_path",
+                                             "guard"))
+def point_query(h: HybridTree, queries: jnp.ndarray, *,
+                max_visited: int = 32, max_results: int = 64,
+                use_kernel: bool = False, force_path: str = "auto",
+                guard: bool = True) -> HybridResult:
+    """Point-query fast path: degenerate rects served with single-cell
+    AI routing and a narrowed traversal.
+
+    A zero-extent query overlaps exactly one grid cell, so the AI path's
+    cell window collapses to ``max_cells=1`` — no window overflow, one
+    bank gather instead of ``max_cells`` — and the classical visit set is
+    a root-to-leaf containment stack, so ``max_visited``/``max_results``
+    shrink to point-sized bounds. No wide tier: the narrowed bounds must
+    cover every row (callers assert ``truncated`` stays empty — the
+    launch driver and the smoke gate both do) instead of re-serving.
+    Everything else — router, guard, fallback, cost accounting — is
+    ``hybrid_query`` exactly; the result is a plain ``HybridResult``.
+    """
+    ait1 = dataclasses.replace(h.ait, max_cells=1)
+    h1 = dataclasses.replace(h, ait=ait1)
+    return hybrid_query(h1, queries, max_visited=max_visited,
+                        max_results=max_results, use_kernel=use_kernel,
+                        force_path=force_path, guard=guard)
+
+
 @functools.partial(jax.jit, static_argnames=("max_visited", "max_results",
                                              "use_kernel", "force_path",
                                              "guard"))

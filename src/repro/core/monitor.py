@@ -277,6 +277,8 @@ class MaintenanceDecision(NamedTuple):
     refit: np.ndarray        # i64 cells to retrain this segment (chunk)
     demote: np.ndarray       # i64 cells to force off the AI path
     promote: np.ndarray      # i64 demoted cells to retrain + readmit
+    refit_skipped: int = 0   # cells the server could not refit (no
+    #                          FitState — cell-granular refit disabled)
 
 
 class MaintenancePolicy:
@@ -335,6 +337,21 @@ class DefaultPolicy(MaintenancePolicy):
             repack=repack, refit=stale.astype(np.int64),
             demote=demote.astype(np.int64),
             promote=promote.astype(np.int64))
+
+
+def _note_refit_skipped(server, d: MaintenanceDecision,
+                        n_cells: int) -> MaintenanceDecision:
+    """Record a policy-decided refit the server couldn't run (no
+    ``FitState``). The skip count rides on the decision — visible in the
+    ``maintenance`` log and ``MixedReport.maintenance`` — and the
+    human-facing notice prints once per server lifetime, not once per
+    segment."""
+    if not getattr(server, "_refit_skip_noticed", False):
+        server._refit_skip_noticed = True
+        print("# policy: cell-granular refit disabled (no FitState) — "
+              "refit/promote cells stay guarded; skip counts recorded "
+              "in the maintenance log")
+    return d._replace(refit_skipped=int(n_cells))
 
 
 class FreshServer:
@@ -508,6 +525,8 @@ class FreshServer:
             # these cells against the new tree
             self.refit_cells(cells)
         else:
+            if cells.size:
+                d = _note_refit_skipped(self, d, cells.size)
             self._sync_guard()
         self.maintenance.append((self.monitor.seg_counter, d))
         return d
@@ -651,6 +670,8 @@ class EngineFreshServer:
         if cells.size and self.fit_state is not None:
             self.refit_cells(cells)
         else:
+            if cells.size:
+                d = _note_refit_skipped(self, d, cells.size)
             self._sync_guard()
         self.maintenance.append((self.monitor.seg_counter, d))
         return d

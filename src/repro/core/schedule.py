@@ -51,6 +51,20 @@ def workload_bbox(queries: np.ndarray) -> np.ndarray:
     return np.concatenate([lo, hi]).astype(np.float32)
 
 
+def point_query_mask(queries: np.ndarray) -> np.ndarray:
+    """[Q, 4] → [Q] bool: degenerate rects (zero extent on both axes).
+
+    The scheduler-side twin of ``hybrid.is_point_query`` — the detection
+    that routes a stream (or the point rows of a mixed stream) onto the
+    point-query fast path: single-cell AI routing plus a narrowed
+    traversal, no wide tier (a point visits exactly the leaves whose
+    MBRs contain it, a set the narrow bound must cover — exactness is
+    asserted, not re-served).
+    """
+    q = np.asarray(queries, np.float32)
+    return (q[:, 0] == q[:, 2]) & (q[:, 1] == q[:, 3])
+
+
 def spatial_keys(queries: np.ndarray, sort: str,
                  bbox: Optional[np.ndarray] = None) -> np.ndarray:
     """[Q, 4] → [Q] i32 curve keys (zeros for ``sort="none"``).

@@ -93,13 +93,33 @@ def load_trace(path: str, n: Optional[int] = None,
     own lead-in. With ``n`` the trace is truncated or tiled (tiling
     shifts each repetition by the trace's span, preserving its rhythm);
     with ``rate`` the stamps are rescaled to that mean arrival rate.
+
+    Edge cases round-trip instead of crashing or emitting NaN gaps: an
+    empty trace loads as an empty stream (unless ``n`` demands arrivals
+    it cannot supply — that raises), ``n <= 0`` truncates any trace to
+    empty, a single-arrival trace tiles on its own lead-in gap, and a
+    trace of duplicate stamps tiles with a floor gap so repetitions
+    never overlap.
     """
     if not os.path.exists(path):
         raise FileNotFoundError(path)
-    a = (np.load(path) if path.endswith(".npy")
-         else np.loadtxt(path)).astype(np.float64).ravel()
+    if path.endswith(".npy"):
+        a = np.load(path)
+    else:
+        import warnings
+        with warnings.catch_warnings():
+            # np.loadtxt warns (and returns shape (0,)) on an empty
+            # file — an empty trace is a valid stream here
+            warnings.simplefilter("ignore", UserWarning)
+            a = np.loadtxt(path)
+    a = a.astype(np.float64).ravel()
+    if n is not None and n <= 0:
+        return np.zeros((0,), np.float64)
     if a.size == 0:
-        raise ValueError(f"empty trace: {path}")
+        if n is None:
+            return np.zeros((0,), np.float64)
+        raise ValueError(f"empty trace cannot supply n={n} arrivals: "
+                         f"{path}")
     a = np.sort(a)
     a -= a[0]
     span = a[-1] if a[-1] > 0 else 1.0
@@ -107,7 +127,10 @@ def load_trace(path: str, n: Optional[int] = None,
     a += max(gap0, span / max(a.size, 1), 1e-9)    # lead-in: no t=0 arrival
     if n is not None and n != a.size:
         reps = -(-n // a.size)
-        a = np.concatenate([a + r * (a[-1] + gap0) for r in range(reps)])[:n]
+        # floor the per-rep shift: duplicate-stamp traces have gap0 == 0
+        # and would otherwise tile every repetition onto the same instant
+        shift = a[-1] + max(gap0, 1e-9)
+        a = np.concatenate([a + r * shift for r in range(reps)])[:n]
     if rate is not None:
         if rate <= 0:
             raise ValueError(f"rate must be positive, got {rate}")

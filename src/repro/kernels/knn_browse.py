@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: distance browsing over compact visited-leaf slots.
+
+The kNN path reuses the range path's I/O discipline: the fused traversal
+(probed with the query's ``center ± radius`` box) names at most ``K``
+candidate leaves per query in a compact ``[B, K]`` slot table, and this
+kernel browses exactly those leaves — only the named ``[1, M]`` entry
+tiles move HBM→VMEM (scalar-prefetch BlockSpec index maps), extraneous
+leaves generate no memory traffic. Per fetched entry it emits the
+squared Euclidean distance to the query center, masked to +inf outside
+the probed radius (or on invalid slots / +inf-padded entries), so the
+caller's top-k over the ``[B, K·M]`` flat view yields the k nearest
+among all points within the radius. The dense ``[B, L]`` visited mask
+never exists on this path — the slot table is the only interchange.
+
+Two grid forms, one semantics (the ``leaf_refine`` split):
+
+* ``fold_k=False`` (the TPU form): a ``(B, K)`` grid, one cell per
+  (query, leaf slot), each DMA-ing one named ``[1, M]`` leaf tile.
+* ``fold_k=True`` (the interpret form): the grid folds away — an XLA
+  gather stages the ``[B, K, M]`` slab and the kernel body runs once.
+  Bit-identical outputs; the right trade when the "DMA" is an emulated
+  memcpy anyway.
+
+Inputs (planar entry layout):
+  ``centers``  [B, 3] f32   — query center x, center y, radius²
+  ``ex``/``ey``[L, M] f32   — entry coordinates, +inf padded
+  ``leaf_idx`` [B, K] i32   — leaves to browse (scalar-prefetched)
+  ``valid``    [B, K] i32   — slot validity
+Output:
+  ``d2``       [B, K, M] f32 — squared distance, +inf where masked
+
++inf-padded entries are safe by arithmetic, not by branch: their
+``dx``/``dy`` are +inf (finite center), so ``d2`` is +inf and the
+radius test fails — the same convention the delta-probe buffer uses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.traverse_fused import tuned_tiles_for_key
+
+
+def tune_key_knn(B: int, K: int, M: int, interp: bool) -> str:
+    """Autotune-cache key for the kNN-browse form space (same cache file
+    as the traversal/mlp/delta forms; see ``benchmarks/autotune``)."""
+    return f"knn-{'interp' if interp else 'tpu'}:B{B}:K{K}:M{M}"
+
+
+def tuned_tiles_knn(B: int, K: int, M: int, interp: bool) -> dict:
+    return tuned_tiles_for_key(tune_key_knn(B, K, M, interp))
+
+
+def vmem_estimate_knn(B: int, K: int, M: int, tpu_form: bool = True) -> int:
+    """Rough VMEM working-set bytes for one browse dispatch.
+
+    The TPU form's cell working set is one query row + one entry tile +
+    one output tile; the folded form stages the whole gathered
+    ``[B, K, M]`` slab (gx, gy, out) plus the query/valid blocks.
+    """
+    if tpu_form:
+        return 3 * 4 + 4 + 2 * M * 4 + M * 4
+    return B * (3 + K) * 4 + 3 * B * K * M * 4
+
+
+def _kernel(idx_ref, q_ref, valid_ref, ex_ref, ey_ref, o_ref):
+    # q_ref: [1, 3]; ex/ey_ref: [1, M]; valid_ref: [1, 1]; o_ref: [1, 1, M]
+    cx = q_ref[0, 0]
+    cy = q_ref[0, 1]
+    r2 = q_ref[0, 2]
+    dx = ex_ref[0, :] - cx
+    dy = ey_ref[0, :] - cy
+    d2 = dx * dx + dy * dy
+    ok = (d2 <= r2) & (valid_ref[0, 0] > 0)
+    o_ref[0, 0, :] = jnp.where(ok, d2, jnp.inf)
+
+
+def _kernel_folded(q_ref, valid_ref, gx_ref, gy_ref, o_ref):
+    # whole-array blocks: q [B, 3]; valid [B, K]; gx/gy/o [B, K, M]
+    q = q_ref[:, :]
+    cx = q[:, 0][:, None, None]
+    cy = q[:, 1][:, None, None]
+    r2 = q[:, 2][:, None, None]
+    dx = gx_ref[:, :, :] - cx
+    dy = gy_ref[:, :, :] - cy
+    d2 = dx * dx + dy * dy
+    ok = (d2 <= r2) & (valid_ref[:, :][:, :, None] > 0)
+    o_ref[:, :, :] = jnp.where(ok, d2, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "fold_k"))
+def knn_browse(centers: jnp.ndarray, ex: jnp.ndarray, ey: jnp.ndarray,
+               leaf_idx: jnp.ndarray, valid: jnp.ndarray, *,
+               interpret: bool = False,
+               fold_k: bool | None = None) -> jnp.ndarray:
+    """centers [B,3] (cx,cy,r²), ex/ey [L,M], leaf_idx/valid [B,K]
+    → d2 [B,K,M] f32 (+inf where masked).
+
+    ``fold_k`` defaults to ``interpret``: the (B, K) scalar-prefetch grid
+    on hardware, the folded form when emulating. Both forms are
+    bit-identical (tested); pass ``fold_k`` explicitly to pin a form.
+    """
+    if fold_k is None:
+        fold_k = interpret
+    B, K = leaf_idx.shape
+    L, M = ex.shape
+    if fold_k:
+        gx = ex[leaf_idx]                       # [B, K, M] XLA-level gather
+        gy = ey[leaf_idx]
+        return pl.pallas_call(
+            _kernel_folded,
+            out_shape=jax.ShapeDtypeStruct((B, K, M), jnp.float32),
+            interpret=interpret,
+        )(centers.astype(jnp.float32), valid.astype(jnp.int32),
+          gx.astype(jnp.float32), gy.astype(jnp.float32))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K),
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda b, k, idx: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, k, idx: (b, k)),
+            pl.BlockSpec((1, M), lambda b, k, idx: (idx[b, k], 0)),
+            pl.BlockSpec((1, M), lambda b, k, idx: (idx[b, k], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, M), lambda b, k, idx: (b, k, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, M), jnp.float32),
+        interpret=interpret,
+    )(leaf_idx.astype(jnp.int32), centers.astype(jnp.float32),
+      valid.astype(jnp.int32), ex.astype(jnp.float32),
+      ey.astype(jnp.float32))

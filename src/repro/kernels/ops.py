@@ -23,6 +23,7 @@ from repro.kernels import forest_infer as _forest
 from repro.kernels import traverse_fused as _traverse
 from repro.kernels import mlp_infer as _mlp
 from repro.kernels import delta_probe as _delta
+from repro.kernels import knn_browse as _knn
 from repro.kernels import spatial_key as _skey
 from repro.kernels import wkv6 as _wkv6
 
@@ -585,6 +586,40 @@ def leaf_refine(queries: jnp.ndarray, leaf_entries: jnp.ndarray,
     safe_idx = jnp.clip(leaf_idx, 0, ex.shape[0] - 1)
     return _refine.leaf_refine(queries, ex, ey, safe_idx, valid,
                                interpret=_interpret())
+
+
+def knn_browse(centers: jnp.ndarray, leaf_entries: jnp.ndarray,
+               leaf_idx: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Distance-browse compact visited-leaf slots: centers [B, 3]
+    (cx, cy, r²), leaf_entries [L, M, 2], leaf_idx/valid [B, K]
+    → d2 [B, K, M] f32 (+inf where masked).
+
+    The kNN serving primitive: only the leaves named in the slot table
+    are touched (scalar-prefetched tiles on the TPU form, an XLA gather
+    on the folded interpret form — see ``kernels.knn_browse``); the
+    caller's top-k over the flat ``[B, K·M]`` view yields the k nearest
+    within the probed radius. Fallback ladder mirrors ``leaf_refine``:
+    the jnp oracle when kernels are off or the form-aware VMEM estimate
+    exceeds the budget — bit-identical either way. The autotune cache is
+    consulted under ``knn-*`` keys for a pinned form (``fold_k``).
+    """
+    ex = leaf_entries[..., 0]
+    ey = leaf_entries[..., 1]
+    if not kernels_enabled():
+        return ref.knn_browse(centers, ex, ey, leaf_idx, valid)
+    interp = _interpret()
+    B, K = leaf_idx.shape
+    M = ex.shape[1]
+    tune = _knn.tuned_tiles_knn(B, K, M, interp)
+    fold = tune.get("fold_k")
+    fold = interp if fold is None else bool(fold)
+    if _knn.vmem_estimate_knn(B, K, M, tpu_form=not fold) > \
+            _traverse.VMEM_BUDGET:
+        return ref.knn_browse(centers, ex, ey, leaf_idx, valid)
+    # clamp padded slots to leaf 0 (masked out by ``valid`` in-kernel)
+    safe_idx = jnp.clip(leaf_idx, 0, ex.shape[0] - 1)
+    return _knn.knn_browse(centers, ex, ey, safe_idx, valid,
+                           interpret=interp, fold_k=fold)
 
 
 def forest_infer(features: jnp.ndarray, feat_idx: jnp.ndarray,

@@ -203,6 +203,31 @@ def leaf_refine(queries: jnp.ndarray, ex: jnp.ndarray, ey: jnp.ndarray,
     return ok & (valid[:, :, None] > 0)
 
 
+def knn_browse(centers: jnp.ndarray, ex: jnp.ndarray, ey: jnp.ndarray,
+               leaf_idx: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """centers [B,3] (cx,cy,r²), ex/ey [L,M], leaf_idx/valid [B,K]
+    → d2 [B,K,M] f32 (+inf outside the radius / invalid slots).
+
+    Ground truth for ``kernels.knn_browse``: squared Euclidean distance
+    from each gathered leaf entry to the query center, masked to +inf
+    when the entry lies outside the probed radius or the slot is
+    invalid. +inf-padded entries yield +inf distance by arithmetic —
+    the identical term order (dx·dx + dy·dy) keeps the kernel twin
+    bit-exact.
+    """
+    gx = ex[leaf_idx].astype(jnp.float32)       # [B, K, M]
+    gy = ey[leaf_idx].astype(jnp.float32)
+    q = centers.astype(jnp.float32)
+    cx = q[:, 0][:, None, None]
+    cy = q[:, 1][:, None, None]
+    r2 = q[:, 2][:, None, None]
+    dx = gx - cx
+    dy = gy - cy
+    d2 = dx * dx + dy * dy
+    ok = (d2 <= r2) & (valid[:, :, None] > 0)
+    return jnp.where(ok, d2, jnp.inf)
+
+
 def forest_infer(sel: jnp.ndarray, thresh: jnp.ndarray,
                  tables: jnp.ndarray) -> jnp.ndarray:
     """sel [B,T,D], thresh [T,D], tables [T,2^D,C] → scores [B,C]."""

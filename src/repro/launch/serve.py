@@ -134,13 +134,14 @@ def serve_mixed(base, extra, hyb, wl, args, rep) -> None:
     """Drive the mixed read/write stream and report freshness stats."""
     fit_state = policy = None
     if args.policy != "none":
-        if rep.fit_state is None or args.classifier == "forest":
-            print("# policy: no per-cell FitState for this classifier — "
-                  "maintenance loop disabled")
-        else:
+        # repack/demote/promote run regardless; without a per-cell
+        # FitState (forest banks) the server skips the refit chunks,
+        # prints its one-time notice, and records the skip count on
+        # each decision (MaintenanceDecision.refit_skipped)
+        policy = DefaultPolicy(refit_chunk=args.refit_chunk,
+                               repack_at=args.repack_at)
+        if rep.fit_state is not None and args.classifier != "forest":
             fit_state = rep.fit_state
-            policy = DefaultPolicy(refit_chunk=args.refit_chunk,
-                                   repack_at=args.repack_at)
     server, ctx = make_fresh_server(base, hyb, args, jax.devices(),
                                     fit_state=fit_state, policy=policy)
     bbox = schedule.workload_bbox(wl.queries)
@@ -176,9 +177,10 @@ def serve_mixed(base, extra, hyb, wl, args, rep) -> None:
         n_ref = sum(r.cells_refit for r in server.refits)
         n_dem = sum(d.demote.size for _, d in mixed.maintenance)
         n_pro = sum(d.promote.size for _, d in mixed.maintenance)
-        print(f"# policy: {n_prep} repacks, {n_ref} cell refits, "
-              f"{n_dem} demotions, {n_pro} promotions across "
-              f"{len(mixed.maintenance)} segment decisions")
+        n_skip = sum(d.refit_skipped for _, d in mixed.maintenance)
+        print(f"# policy: {n_prep} repacks, {n_ref} cell refits "
+              f"({n_skip} skipped), {n_dem} demotions, {n_pro} promotions "
+              f"across {len(mixed.maintenance)} segment decisions")
         # recovery curve: guard/AI rates per segment show the AI path
         # coming back chunk by chunk after each span-diff repack
         g = np.asarray(st.guarded)
@@ -253,6 +255,166 @@ def serve_open_loop(narrow_fn, wide_fn, trunc_field, wl, args) -> None:
              f"flag" if rep.n_degraded else ""))
 
 
+def _timed_stream(narrow_fn, q, args, *, wide_fn=None, trunc_field=None,
+                  bbox=None):
+    """Warm both tiers, then time ``--reps`` full-stream repetitions."""
+    report = schedule.serve_workload(
+        narrow_fn, q, batch=args.batch, sort=args.sort, bbox=bbox,
+        wide_fn=wide_fn, trunc_field=trunc_field)
+    t0 = time.time()
+    for _ in range(args.reps):
+        report = schedule.serve_workload(
+            narrow_fn, q, batch=args.batch, sort=args.sort, bbox=bbox,
+            wide_fn=wide_fn, trunc_field=trunc_field)
+    return report, (time.time() - t0) / args.reps
+
+
+def serve_knn(dtree, pts, args) -> None:
+    """kNN stream: distance browsing at a density-derived radius, with
+    the radius-doubling wide tier re-serving flagged rows; a brute-force
+    k-distance oracle checks a sample bit-exactly (prefix property on
+    rows still truncated)."""
+    from repro.core import knn as knnlib
+    rng = np.random.default_rng(0)
+    centers = pts[rng.integers(0, pts.shape[0], args.queries)].astype(
+        np.float32)
+    q = np.concatenate([centers, centers], axis=1)
+    r = knnlib.default_radius(dtree, args.knn_k, margin=args.knn_margin)
+    narrow, wide = knnlib.make_knn_steps(
+        dtree, k=args.knn_k, radius=r, max_visited=args.max_visited,
+        wide_factor=args.wide_factor, use_kernel=args.kernel)
+    report, dt_s = _timed_stream(narrow, q, args, wide_fn=wide,
+                                 trunc_field="truncated",
+                                 bbox=schedule.workload_bbox(q))
+    st = report.stats
+    resid = int(np.asarray(st.truncated).sum())
+    acc = float(np.asarray(st.leaf_accesses).mean())
+    print(f"# knn stream: k={args.knn_k}, radius {r:.4g} "
+          f"(margin {args.knn_margin}), {report.n_queries} queries in "
+          f"{report.n_batches} batches (sort={report.sort}), "
+          f"{report.n_reserved} re-served at 2x radius, {resid} still "
+          f"truncated (flagged, never approximate)")
+    print(f"# serve: {report.n_queries/dt_s:.0f} queries/s, "
+          f"{acc:.2f} leaf accesses/query, mean k-distance "
+          f"{float(np.sqrt(np.asarray(st.neighbor_d2)[:, -1][~np.asarray(st.truncated)].mean())):.4g}")
+    # oracle: sampled rows vs all-pairs brute kNN — d2 must match
+    # bit-for-bit (both sides evaluate dx*dx+dy*dy under jit, so XLA's
+    # FMA contraction is identical); truncated rows match on the
+    # in-radius prefix
+    m = min(256, q.shape[0])
+    idx = rng.choice(q.shape[0], m, replace=False)
+    bd2, _ = knnlib.knn_brute(pts, centers[idx], args.knn_k)
+    got = np.asarray(st.neighbor_d2)[idx]
+    trunc = np.asarray(st.truncated)[idx]
+    nw = np.asarray(st.n_within)[idx]
+    mism = 0
+    for j in range(m):
+        kk = args.knn_k if not trunc[j] else min(int(nw[j]), args.knn_k)
+        mism += int(not np.array_equal(got[j, :kk], bd2[j, :kk]))
+    print(f"# oracle: {mism} / {m} sampled rows mismatch brute-force "
+          f"k-distances (bit-exact)")
+
+
+def serve_join(dtree, pts, args) -> None:
+    """Spatial join stream: index-nested-loop over the fused traversal,
+    pairs through the shared compaction epilogue; a brute-force pair-set
+    oracle checks a sample exactly."""
+    from repro.core import joins
+    rng = np.random.default_rng(0)
+    outer = synth.synth_queries(pts, args.selectivity, args.queries)
+    rep = joins.spatial_join(dtree, outer, batch=args.batch,
+                             max_pairs=args.join_pairs,
+                             max_visited=args.max_visited, sort=args.sort,
+                             wide_factor=args.wide_factor,
+                             use_kernel=args.kernel)   # warm both tiers
+    t0 = time.time()
+    for _ in range(args.reps):
+        rep = joins.spatial_join(dtree, outer, batch=args.batch,
+                                 max_pairs=args.join_pairs,
+                                 max_visited=args.max_visited,
+                                 sort=args.sort,
+                                 wide_factor=args.wide_factor,
+                                 use_kernel=args.kernel)
+    dt_s = (time.time() - t0) / args.reps
+    print(f"# join stream: {rep.n_outer} outer rects x {pts.shape[0]} "
+          f"points -> {rep.n_pairs} pairs "
+          f"({rep.n_pairs/max(rep.n_outer,1):.1f}/outer) in "
+          f"{rep.n_batches} batches (sort={rep.sort}), {rep.n_reserved} "
+          f"re-served wide, {rep.residual_truncated} still truncated")
+    print(f"# serve: {rep.n_outer/dt_s:.0f} outer rows/s, "
+          f"{rep.n_pairs/dt_s:.0f} pairs/s")
+    # oracle: sampled outer rows' pair sets vs dense brute containment;
+    # rows the wide tier still truncated are excluded (flagged above)
+    m = min(256, outer.shape[0])
+    idx = rng.choice(outer.shape[0], m, replace=False)
+    still = np.asarray(rep.stats.truncated).astype(bool)
+    idx = idx[~still[idx]]
+    bp = joins.join_brute(pts, outer[idx])
+    remap = {int(o): i for i, o in enumerate(idx)}
+    sel = np.isin(rep.pairs[:, 0], idx)
+    got = {(remap[int(o)], int(pj)) for o, pj in rep.pairs[sel]}
+    brute = {(int(o), int(pj)) for o, pj in bp}
+    print(f"# oracle: {len(got ^ brute)} pair mismatches vs brute-force "
+          f"containment over {idx.size} sampled outer rows")
+
+
+def serve_point(hyb, base, args, devices) -> None:
+    """Point-query stream: degenerate rects at dataset points served
+    with single-cell AI routing and narrowed bounds — no wide tier, so
+    exactness is *asserted* (zero truncated rows) instead of re-served."""
+    import contextlib
+    from repro.core import hybrid as hybmod
+    rng = np.random.default_rng(0)
+    ppts = base[rng.integers(0, base.shape[0], args.queries)].astype(
+        np.float32)
+    q = np.concatenate([ppts, ppts], axis=1)
+    if args.distributed and len(devices) > 1:
+        n = len(devices)
+        nd = max(1, n // 2)
+        n_model = n // nd
+        mesh = jax.make_mesh((nd, n_model), ("data", "model"))
+        hyb_s = engine.pad_tree_for_sharding(hyb, n_model)
+        cfg = engine.EngineConfig(max_visited=args.max_visited,
+                                  use_kernel=args.kernel)
+        step = engine.make_point_serve_step(mesh, cfg,
+                                            kind=args.classifier)
+        narrow = jax.jit(lambda qq: step(hyb_s, qq))
+        trunc_field, ctx = "r_truncated", pmesh.set_mesh(mesh)
+    else:
+        narrow = jax.jit(lambda qq: hybmod.point_query(
+            hyb, qq, use_kernel=args.kernel))
+        trunc_field, ctx = "truncated", contextlib.nullcontext()
+    with ctx:
+        report, dt_s = _timed_stream(narrow, q, args,
+                                     bbox=schedule.workload_bbox(q))
+    st = report.stats
+    resid = int(np.asarray(getattr(st, trunc_field)).sum())
+    acc = float(np.asarray(st.leaf_accesses).mean())
+    ai = float(np.asarray(st.used_ai).mean())
+    print(f"# point stream: {report.n_queries} degenerate-rect queries "
+          f"in {report.n_batches} batches (sort={report.sort}), "
+          f"single-cell AI routing, no wide tier")
+    print(f"# serve: {report.n_queries/dt_s:.0f} queries/s, "
+          f"{acc:.2f} leaf accesses/query, {100*ai:.1f}% AI path")
+    # the narrowed bounds must cover every row — a truncated point query
+    # would be silently wrong, so this is an assert, not a re-serve
+    assert resid == 0, f"{resid} truncated point queries"
+    got = np.asarray(st.n_results)
+    # containment in f32 — the serving path (and the tree's leaf
+    # entries) is f32 throughout, and a degenerate rect only contains
+    # the points that are *bit-equal* at that precision
+    bf = base.astype(np.float32)
+    mism = 0
+    for o in range(0, q.shape[0], 256):
+        qs = q[o:o + 256]
+        exp = geo.np_contains_point(qs[:, None, :],
+                                    bf[None, :, :]).sum(axis=1)
+        mism += int(np.sum(exp != got[o:o + 256]))
+    print(f"# oracle: 0 truncated (exactness asserted); {mism} / "
+          f"{report.n_queries} n_results mismatches vs brute-force "
+          f"containment")
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--dataset", default="tweets", choices=("tweets",
@@ -317,7 +479,27 @@ def main() -> None:
     p.add_argument("--repack-at", type=float, default=0.75,
                    help="policy repacks once the delta buffer passes this "
                         "fill fraction")
+    p.add_argument("--query-type", default="range",
+                   choices=("range", "point", "knn", "join"),
+                   help="serving path: range rects (default), point "
+                        "lookups (degenerate rects, single-cell AI "
+                        "routing, exactness asserted), kNN (distance "
+                        "browsing with a radius-doubling wide tier), or "
+                        "spatial join (index-nested-loop, pair-slot "
+                        "tables)")
+    p.add_argument("--knn-k", type=int, default=8,
+                   help="neighbors per query for --query-type knn")
+    p.add_argument("--knn-margin", type=float, default=2.0,
+                   help="probe radius margin over the density estimate "
+                        "(larger = fewer wide-tier re-serves)")
+    p.add_argument("--join-pairs", type=int, default=16,
+                   help="narrow-tier pair-slot width for --query-type "
+                        "join")
     args = p.parse_args()
+    if args.query_type != "range" and (args.insert_rate > 0
+                                       or args.arrival != "closed"):
+        p.error("--query-type point/knn/join drive the closed-loop "
+                "read-only stream (no --insert-rate / --arrival)")
 
     gen = synth.tweets_like if args.dataset == "tweets" else synth.crimes_like
     pts = gen(args.points)
@@ -332,6 +514,13 @@ def main() -> None:
     print(f"# R-tree: {dtree.n_leaves} leaves, height {dtree.height}, "
           f"built in {time.time()-t0:.1f}s")
 
+    if args.query_type == "knn":
+        serve_knn(dtree, pts, args)
+        return
+    if args.query_type == "join":
+        serve_join(dtree, pts, args)
+        return
+
     qs = synth.synth_queries(pts, args.selectivity, args.queries)
     wl = labels.make_workload(dtree, qs)
     print(f"# workload: mean α {wl.alpha.mean():.3f}, "
@@ -343,6 +532,10 @@ def main() -> None:
           f"({int(rep.cell_fit.sum())}/{rep.cell_fit.size} cells exact), "
           f"router test acc {rep.router.test_acc:.3f}, "
           f"models {rep.model_bytes/1e6:.2f} MB")
+
+    if args.query_type == "point":
+        serve_point(hyb, base, args, jax.devices())
+        return
 
     if n_ins:
         serve_mixed(base, extra, hyb, wl, args, rep)

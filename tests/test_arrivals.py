@@ -1,0 +1,86 @@
+"""Regression tests for trace-replay edge cases (``data.arrivals``).
+
+Empty, single-arrival, and duplicate-stamp traces must round-trip
+through save/load/tile/rescale without crashes, NaN inter-arrival gaps,
+or overlapping repetitions.
+"""
+import numpy as np
+import pytest
+
+from repro.data import arrivals
+
+
+def _gaps(a: np.ndarray) -> np.ndarray:
+    return np.diff(np.concatenate([[0.0], a]))
+
+
+def _roundtrip(tmp_path, src, name, **kw):
+    path = str(tmp_path / name)
+    arrivals.save_trace(path, np.asarray(src, np.float64))
+    return arrivals.load_trace(path, **kw)
+
+
+@pytest.mark.parametrize("ext", ["npy", "txt"])
+def test_empty_trace_roundtrips_empty(tmp_path, ext):
+    a = _roundtrip(tmp_path, [], f"t.{ext}")
+    assert a.shape == (0,) and a.dtype == np.float64
+    # rescale on an empty stream is a no-op, not a division by a[-1]
+    a = _roundtrip(tmp_path, [], f"t2.{ext}", rate=10.0)
+    assert a.shape == (0,)
+
+
+def test_empty_trace_with_demand_raises(tmp_path):
+    with pytest.raises(ValueError, match="empty trace"):
+        _roundtrip(tmp_path, [], "t.npy", n=10)
+
+
+def test_zero_demand_truncates_to_empty(tmp_path):
+    for src in ([], [3.0], [1.0, 2.0, 5.0]):
+        a = _roundtrip(tmp_path, src, "t.npy", n=0)
+        assert a.shape == (0,) and a.dtype == np.float64
+
+
+def test_single_arrival_tiles_without_nan(tmp_path):
+    a = _roundtrip(tmp_path, [7.5], "t.npy", n=6)
+    assert a.shape == (6,)
+    g = _gaps(a)
+    assert np.all(np.isfinite(g)) and np.all(g > 0)
+
+
+def test_single_arrival_rescale(tmp_path):
+    a = _roundtrip(tmp_path, [7.5], "t.npy", n=100, rate=50.0)
+    assert a.shape == (100,)
+    assert np.all(np.isfinite(a)) and np.all(_gaps(a) > 0)
+    assert a[-1] == pytest.approx(100 / 50.0)
+
+
+def test_duplicate_stamps_tile_strictly_increasing(tmp_path):
+    # gap0 == 0: the per-rep shift must floor, not stack reps in place
+    a = _roundtrip(tmp_path, [2.0, 2.0, 2.0], "t.npy", n=12)
+    assert a.shape == (12,)
+    assert np.all(np.isfinite(a))
+    assert np.unique(a).size == np.unique(np.round(a, 12)).size
+    # repetitions advance: each rep's first stamp is past the previous last
+    assert a[-1] > a[2]
+
+
+def test_trace_rhythm_preserved_on_tile(tmp_path):
+    src = np.array([0.0, 1.0, 3.0])
+    a = _roundtrip(tmp_path, src, "t.npy", n=6)
+    g = _gaps(a)
+    # the second repetition repeats the first's internal gaps
+    np.testing.assert_allclose(g[4:6], g[1:3])
+    assert np.all(g > 0)
+
+
+def test_rescaled_mean_rate(tmp_path):
+    src = np.cumsum(np.full(200, 0.02))
+    a = _roundtrip(tmp_path, src, "t.npy", rate=25.0)
+    assert a.size / a[-1] == pytest.approx(25.0)
+
+
+def test_make_arrivals_trace_empty_demand(tmp_path):
+    path = str(tmp_path / "t.npy")
+    arrivals.save_trace(path, np.zeros((0,), np.float64))
+    a = arrivals.make_arrivals("trace", 0, 0.0, trace=path)
+    assert a.shape == (0,)
